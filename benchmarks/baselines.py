@@ -1,0 +1,118 @@
+"""Storage baselines (the paper's Dill / Shelve / ZODB analogues for
+training-state pytrees).
+
+* SnapshotStore  — Dill analog: one full serialized blob per save.
+* PerLeafStore   — ZODB/Shelve analog: one entry per leaf per save
+                   (object-granularity versioning, no sub-leaf deltas);
+                   `dedup=True` adds leaf-level content addressing (a
+                   strong baseline ≈ SplitAll-at-leaf + change detector).
+Both implement save(state) -> TimeID / load(time_id) and track bytes.
+"""
+from __future__ import annotations
+
+import io
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import hashlib
+import msgpack
+import numpy as np
+
+
+def _pack_leaf(arr: Any) -> bytes:
+    a = np.asarray(arr)
+    return msgpack.packb({"d": a.tobytes(), "s": list(a.shape),
+                          "t": str(a.dtype)}, use_bin_type=True)
+
+
+def _unpack_leaf(b: bytes) -> np.ndarray:
+    o = msgpack.unpackb(b, raw=False)
+    return np.frombuffer(o["d"], dtype=np.dtype(o["t"])).reshape(o["s"])
+
+
+def _flatten(state: Any, prefix: str = "") -> List[Tuple[str, Any]]:
+    out = []
+    if isinstance(state, dict):
+        for k, v in state.items():
+            out.extend(_flatten(v, f"{prefix}/{k}" if prefix else str(k)))
+    else:
+        out.append((prefix, state))
+    return out
+
+
+class SnapshotStore:
+    """Full-blob snapshotting (Dill analog)."""
+
+    name = "snapshot"
+
+    def __init__(self) -> None:
+        self.blobs: Dict[int, bytes] = {}
+        self.total_bytes = 0
+        self._next = 1
+
+    def save(self, state: Any, **_hints: Any) -> int:
+        leaves = _flatten(state)
+        blob = msgpack.packb(
+            [(k, _pack_leaf(v) if hasattr(v, "shape") else repr(v).encode())
+             for k, v in leaves], use_bin_type=True)
+        tid = self._next
+        self._next += 1
+        self.blobs[tid] = blob
+        self.total_bytes += len(blob)
+        return tid
+
+    def load(self, time_id: int, names: Optional[set] = None) -> Dict:
+        # loading always reads the WHOLE snapshot (the paper's Fig 12 point)
+        blob = self.blobs[time_id]
+        leaves = msgpack.unpackb(blob, raw=False)
+        out = {}
+        for k, v in leaves:
+            if names is None or k.split("/")[0] in names:
+                out[k] = _unpack_leaf(v) if isinstance(v, (bytes, bytearray)) \
+                    and len(v) > 8 else v
+        return out
+
+    def bytes_read_for(self, time_id: int) -> int:
+        return len(self.blobs[time_id])
+
+
+class PerLeafStore:
+    """One entry per (time, leaf) — object-granularity versioning."""
+
+    def __init__(self, dedup: bool = False) -> None:
+        self.dedup = dedup
+        self.name = "perleaf-dedup" if dedup else "perleaf"
+        self.entries: Dict[str, bytes] = {}
+        self.index: Dict[int, Dict[str, str]] = {}
+        self.total_bytes = 0
+        self._next = 1
+
+    def save(self, state: Any, **_hints: Any) -> int:
+        tid = self._next
+        self._next += 1
+        idx = {}
+        for k, v in _flatten(state):
+            blob = _pack_leaf(v) if hasattr(v, "shape") else repr(v).encode()
+            if self.dedup:
+                key = hashlib.blake2b(blob, digest_size=16).hexdigest()
+            else:
+                key = f"{tid}:{k}"
+            if key not in self.entries:
+                self.entries[key] = blob
+                self.total_bytes += len(blob)
+            idx[k] = key
+        self.index[tid] = idx
+        return tid
+
+    def load(self, time_id: int, names: Optional[set] = None) -> Dict:
+        out = {}
+        for k, key in self.index[time_id].items():
+            if names is None or k.split("/")[0] in names:
+                blob = self.entries[key]
+                out[k] = _unpack_leaf(blob) if len(blob) > 8 else blob
+        return out
+
+    def bytes_read_for(self, time_id: int, names: Optional[set] = None) -> int:
+        return sum(len(self.entries[key])
+                   for k, key in self.index[time_id].items()
+                   if names is None or k.split("/")[0] in names)

@@ -1,0 +1,393 @@
+"""Chipmink benchmarks — one per paper table/figure (see DESIGN.md §6).
+
+Each function returns a list of row-dicts; run.py prints them as CSV and
+the paper-contract `name,us_per_call,derived` lines.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import (BundleAll, Chipmink, LGA, MemoryStore, RandomPolicy,
+                        SplitAll, TbH, build_graph, lga0, lga1, pod_graph)
+from repro.core.lga import expected_cost
+from repro.core.volatility import ConstantVolatility
+
+from .baselines import PerLeafStore, SnapshotStore
+from .workloads import TRACES, synthetic_lists_trace
+
+
+def _chipmink(**kw) -> Chipmink:
+    kw.setdefault("chunk_bytes", 1 << 13)
+    return Chipmink(MemoryStore(), LGA(), **kw)
+
+
+def _run_trace(system, trace, use_hints: bool = True):
+    """Feed a trace through a store; returns (bytes, per-save seconds)."""
+    times = []
+    tids = []
+    for state, hints in trace:
+        t0 = time.perf_counter()
+        if isinstance(system, Chipmink):
+            tid = system.save(state, **(hints if use_hints else {}))
+        else:
+            tid = system.save(state)
+        times.append(time.perf_counter() - t0)
+        tids.append(tid)
+    if isinstance(system, Chipmink):
+        system.wait()
+        return system.store.total_bytes(), times, tids
+    return system.total_bytes, times, tids
+
+
+# -- Fig 8: storage across workloads ----------------------------------------
+
+def bench_storage(n_ckpts: int = 10) -> List[Dict]:
+    rows = []
+    for wname, mk in TRACES.items():
+        for sysname, mksys in [
+            ("chipmink", lambda: _chipmink()),
+            ("snapshot", SnapshotStore),
+            ("perleaf", PerLeafStore),
+            ("perleaf-dedup", lambda: PerLeafStore(dedup=True)),
+        ]:
+            total, times, _ = _run_trace(mksys(), mk(n_ckpts))
+            rows.append({"bench": "storage_fig8", "workload": wname,
+                         "system": sysname, "bytes": total,
+                         "save_ms_p50": 1e3 * float(np.median(times))})
+    # derived: reduction vs best baseline per workload
+    for wname in TRACES:
+        ours = next(r for r in rows if r["workload"] == wname
+                    and r["system"] == "chipmink")["bytes"]
+        best = min(r["bytes"] for r in rows if r["workload"] == wname
+                   and r["system"] != "chipmink")
+        rows.append({"bench": "storage_fig8", "workload": wname,
+                     "system": "reduction_x", "bytes": round(best / ours, 2),
+                     "save_ms_p50": 0.0})
+    return rows
+
+
+# -- Fig 9 / 10: latency + breakdown -----------------------------------------
+
+def bench_latency(n_ckpts: int = 10) -> List[Dict]:
+    rows = []
+    for wname in ("finetune", "sparse_emb", "serving"):
+        mk = TRACES[wname]
+        for sysname, mksys in [("chipmink", lambda: _chipmink()),
+                               ("chipmink-async",
+                                lambda: _chipmink(async_mode=True)),
+                               ("snapshot", SnapshotStore)]:
+            _, times, _ = _run_trace(mksys(), mk(n_ckpts))
+            t = np.asarray(times[1:]) * 1e3  # skip cold save
+            rows.append({"bench": "latency_fig9", "workload": wname,
+                         "system": sysname,
+                         "p50_ms": float(np.percentile(t, 50)),
+                         "p90_ms": float(np.percentile(t, 90)),
+                         "total_ms": float(t.sum())})
+    return rows
+
+
+def bench_breakdown(n_ckpts: int = 8) -> List[Dict]:
+    ck = _chipmink()
+    _run_trace(ck, TRACES["sparse_emb"](n_ckpts))
+    agg: Dict[str, float] = {}
+    for s in ck.save_stats[1:]:
+        for k in ("t_graph", "t_avf", "t_digest", "t_podding", "t_write"):
+            agg[k] = agg.get(k, 0.0) + s.get(k, 0.0)
+    total = sum(agg.values()) or 1.0
+    return [{"bench": "breakdown_fig10", "stage": k,
+             "ms": 1e3 * v, "frac": v / total} for k, v in agg.items()]
+
+
+# -- Fig 11: compression -----------------------------------------------------
+
+def bench_compression(n_ckpts: int = 8) -> List[Dict]:
+    rows = []
+    for compress in (False, True):
+        ck = Chipmink(MemoryStore(compress=compress), LGA(),
+                      chunk_bytes=1 << 13)
+        total, times, _ = _run_trace(ck, TRACES["finetune"](n_ckpts))
+        rows.append({"bench": "compression_fig11", "system":
+                     f"chipmink+zstd={compress}", "bytes": total,
+                     "save_ms_p50": 1e3 * float(np.median(times))})
+    snap = SnapshotStore()
+    total, times, _ = _run_trace(snap, TRACES["finetune"](n_ckpts))
+    rows.append({"bench": "compression_fig11", "system": "snapshot",
+                 "bytes": total, "save_ms_p50": 1e3 * float(np.median(times))})
+    return rows
+
+
+# -- Fig 12: partial loading --------------------------------------------------
+
+def bench_loading(n_ckpts: int = 8) -> List[Dict]:
+    rows = []
+    ck = _chipmink()
+    _, _, tids = _run_trace(ck, TRACES["sparse_emb"](n_ckpts))
+    t0 = time.perf_counter()
+    ck.load(names={"step"}, time_id=tids[-1])
+    t_partial = time.perf_counter() - t0
+    pods_partial = ck.last_load_pods
+    t0 = time.perf_counter()
+    ck.load(time_id=tids[-1])
+    t_full = time.perf_counter() - t0
+    pods_full = ck.last_load_pods
+    rows.append({"bench": "loading_fig12", "system": "chipmink",
+                 "partial_ms": 1e3 * t_partial, "full_ms": 1e3 * t_full,
+                 "partial_pods": pods_partial, "full_pods": pods_full})
+    snap = SnapshotStore()
+    _, _, tids = _run_trace(snap, TRACES["sparse_emb"](n_ckpts))
+    t0 = time.perf_counter()
+    snap.load(tids[-1], names={"step"})
+    t_par = time.perf_counter() - t0
+    rows.append({"bench": "loading_fig12", "system": "snapshot",
+                 "partial_ms": 1e3 * t_par,
+                 "partial_bytes": snap.bytes_read_for(tids[-1]),
+                 "note": "reads whole snapshot regardless"})
+    return rows
+
+
+# -- Fig 13: mutation-fraction sweep ------------------------------------------
+
+def bench_mutation_sweep(n_ckpts: int = 6) -> List[Dict]:
+    rows = []
+    for frac in (0.0, 0.1, 0.35, 0.7, 1.0):
+        ck = _chipmink()
+        total, times, _ = _run_trace(
+            ck, synthetic_lists_trace(n_ckpts, mutate_frac=frac,
+                                      n_lists=64, strings=256))
+        snap = SnapshotStore()
+        stotal, stimes, _ = _run_trace(
+            snap, synthetic_lists_trace(n_ckpts, mutate_frac=frac,
+                                        n_lists=64, strings=256))
+        rows.append({"bench": "mutation_fig13", "mutate_frac": frac,
+                     "chipmink_bytes": total, "snapshot_bytes": stotal,
+                     "chipmink_ms": 1e3 * float(np.median(times[1:])),
+                     "snapshot_ms": 1e3 * float(np.median(stimes[1:]))})
+    return rows
+
+
+# -- Fig 14: scaling + small-scale exhaustive optimality ----------------------
+
+def bench_scaling() -> List[Dict]:
+    rows = []
+    for n_lists in (4, 16, 64, 256):
+        ck = _chipmink()
+        total, times, _ = _run_trace(
+            ck, synthetic_lists_trace(5, mutate_frac=0.01,
+                                      n_lists=n_lists, strings=64))
+        rows.append({"bench": "scaling_fig14", "n_leaves": n_lists,
+                     "bytes": total,
+                     "save_ms_p50": 1e3 * float(np.median(times[1:]))})
+    rows.extend(bench_exhaustive_optimality())
+    return rows
+
+
+def bench_exhaustive_optimality() -> List[Dict]:
+    """Paper Fig 14a: LGA vs exhaustive search over all 2^n podding
+    decisions at small scale (>99% optimality claimed)."""
+    import itertools
+    rng = np.random.default_rng(0)
+    state = {f"x{i}": rng.standard_normal((rng.integers(2, 40), 4)
+                                          ).astype(np.float32)
+             for i in range(8)}
+    g = build_graph(state, chunk_bytes=1 << 20)
+    nodes = [n for n in g.iter_dfs()][1:]          # skip root
+    lam = 0.3
+    c_pod = 200.0
+
+    # exhaustive: each non-root node either bundles into parent's pod or
+    # splits (tree partitioning — the Appendix A.3 formulation)
+    parent = {}
+    for n in g.nodes.values():
+        for c in n.children:
+            parent[c] = n.node_id
+
+    best = None
+    ids = [n.node_id for n in nodes]
+    for bits in itertools.product((0, 1), repeat=len(ids)):
+        pod_of = {g.root_id: 0}
+        next_pod = 1
+        for nid, b in zip(ids, bits):
+            if b:
+                pod_of[nid] = next_pod
+                next_pod += 1
+            else:
+                pod_of[nid] = pod_of[parent[nid]]
+        sizes: Dict[int, float] = {}
+        lams: Dict[int, float] = {}
+        for nid, p in pod_of.items():
+            sizes[p] = sizes.get(p, 0.0) + g.nodes[nid].size
+            lams[p] = lams.get(p, 0.0) + lam
+        cost = expected_cost(list(zip(sizes.values(), lams.values())), c_pod)
+        best = cost if best is None else min(best, cost)
+
+    policy = LGA(volatility=ConstantVolatility(lam), c_pod=c_pod)
+    asg = pod_graph(g, policy)
+    pairs = [(p.size, p.lam) for p in asg.pods.values()]
+    lga_cost = expected_cost(pairs, c_pod)
+    return [{"bench": "optimality_fig14", "lga_cost": round(lga_cost, 1),
+             "optimal_cost": round(best, 1),
+             "optimality": round(best / lga_cost, 4)}]
+
+
+# -- Fig 15: podding optimizers ----------------------------------------------
+
+def bench_podding_optimizers(n_ckpts: int = 8) -> List[Dict]:
+    rows = []
+    mk_policies = [
+        ("lga", lambda: LGA()),
+        ("bundle-all", BundleAll),
+        ("split-all", SplitAll),
+        ("random", lambda: RandomPolicy(0)),
+        ("tbh", TbH),
+        ("lga-0", lga0),
+        ("lga-1", lga1),
+    ]
+    for pname, mkp in mk_policies:
+        ck = Chipmink(MemoryStore(), mkp(), chunk_bytes=1 << 13)
+        t0 = time.perf_counter()
+        total, times, _ = _run_trace(ck, TRACES["sparse_emb"](n_ckpts))
+        rows.append({"bench": "podding_fig15", "policy": pname,
+                     "bytes": total,
+                     "total_s": round(time.perf_counter() - t0, 3),
+                     "n_pods_last": ck.save_stats[-1]["n_pods"]})
+    # loose lower bound (paper: max namespace size)
+    states = list(TRACES["sparse_emb"](n_ckpts))
+    ns_bytes = sum(np.asarray(v).nbytes
+                   for v in _leaves(states[0][0]))
+    rows.append({"bench": "podding_fig15", "policy": "lower-bound",
+                 "bytes": ns_bytes, "total_s": 0.0, "n_pods_last": 0})
+    return rows
+
+
+def _leaves(state):
+    if isinstance(state, dict):
+        for v in state.values():
+            yield from _leaves(v)
+    elif hasattr(state, "shape"):
+        yield state
+
+
+# -- Fig 16: CD / AVF ablation -------------------------------------------------
+
+def bench_cd_avf(n_ckpts: int = 8) -> List[Dict]:
+    rows = []
+    for name, kw in [("chipmink", {}),
+                     ("only-cd", {"enable_avf": False}),
+                     ("only-avf", {"enable_cd": False}),
+                     ("no-cd-avf", {"enable_cd": False, "enable_avf": False})]:
+        ck = _chipmink(**kw)
+        total, times, _ = _run_trace(ck, TRACES["finetune"](n_ckpts))
+        rows.append({"bench": "ablation_fig16", "system": name,
+                     "bytes": total,
+                     "save_ms_p50": 1e3 * float(np.median(times[1:]))})
+    return rows
+
+
+# -- Fig 17/20: async ----------------------------------------------------------
+
+def bench_async(n_ckpts: int = 8) -> List[Dict]:
+    """Perceived (blocking) save latency with think-time between saves —
+    the paper's Fig 17 setting: the podding thread overlaps the user's
+    next executions; only executions touching active variables block."""
+    rows = []
+    for name, kw in [("sync", {"async_mode": False}),
+                     ("async(AVL+ASCC)", {"async_mode": True})]:
+        ck = _chipmink(**kw)
+        perceived = []
+        for state, hints in TRACES["sparse_emb"](n_ckpts):
+            t0 = time.perf_counter()
+            ck.save(state, **hints)
+            perceived.append(time.perf_counter() - t0)
+            # "think time" / next device step: XLA compute and user pauses
+            # release the GIL, so the podding thread overlaps them
+            time.sleep(0.12)
+        ck.wait()
+        t = np.asarray(perceived[1:]) * 1e3
+        rows.append({"bench": "async_fig17", "system": name,
+                     "perceived_p50_ms": float(np.percentile(t, 50)),
+                     "perceived_p90_ms": float(np.percentile(t, 90))})
+    return rows
+
+
+# -- Fig 19: thesaurus capacity -------------------------------------------------
+
+def bench_thesaurus(n_ckpts: int = 8) -> List[Dict]:
+    rows = []
+    for cap in (0, 1 << 8, 1 << 12, 1 << 20, 1 << 30):
+        ck = _chipmink(thesaurus_capacity=cap)
+        total, _, _ = _run_trace(ck, TRACES["sparse_emb"](n_ckpts))
+        hits, misses = ck.thesaurus.stats()
+        rows.append({"bench": "thesaurus_fig19", "capacity_bytes": cap,
+                     "bytes": total, "hits": hits, "misses": misses})
+    return rows
+
+
+# -- Table 3: ASCC accuracy ------------------------------------------------------
+
+def bench_ascc() -> List[Dict]:
+    import jax
+    import jax.numpy as jnp
+    from repro.core.ascc import is_static_execution
+
+    state = {"w": jnp.ones((16,)), "b": jnp.zeros((4,))}
+    x = jnp.ones((16,))
+    cases = [  # (name, fn, truly_static)
+        ("eval", lambda s, v: (s, (s["w"] * v).sum()), True),
+        ("norm", lambda s, v: (s, jnp.linalg.norm(s["w"])), True),
+        ("identity-reshape",
+         lambda s, v: ({"w": s["w"].reshape(16), "b": s["b"]}, None), True),
+        ("update", lambda s, v: ({"w": s["w"] + v, "b": s["b"]}, None), False),
+        ("scale-by-one (false-negative ok)",
+         lambda s, v: ({"w": s["w"] * 1.0, "b": s["b"]}, None), True),
+        ("swap", lambda s, v: ({"w": s["w"], "b": s["b"] * 2.0}, None), False),
+    ]
+    tp = fp = fn = tn = 0
+    rows = []
+    for name, fn_, truly in cases:
+        pred = is_static_execution(fn_, state, x)
+        rows.append({"bench": "ascc_table3", "case": name,
+                     "predicted_static": pred, "truly_static": truly})
+        if pred and truly:
+            tp += 1
+        elif pred and not truly:
+            fp += 1
+        elif not pred and truly:
+            fn += 1
+        else:
+            tn += 1
+    precision = tp / max(tp + fp, 1)
+    recall = tp / max(tp + fn, 1)
+    rows.append({"bench": "ascc_table3", "case": "summary",
+                 "precision": precision, "recall": round(recall, 3),
+                 "note": "precision must be 1.0 (paper: no false positives)"})
+    assert precision == 1.0
+    return rows
+
+
+# -- kernel throughput -------------------------------------------------------------
+
+def bench_kernel() -> List[Dict]:
+    """Fingerprint kernel: interpret-mode correctness cost + the TPU
+    napkin model (memory-bound at HBM: 819 GB/s ⇒ 14 GiB bf16 model
+    fingerprints in ~18 ms on device vs ~1 s over PCIe to host xxhash)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.ops import leaf_fingerprint_np
+
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((1 << 20,)).astype(np.float32)  # 4 MiB
+    t0 = time.perf_counter()
+    for _ in range(3):
+        leaf_fingerprint_np(x, chunk_bytes=1 << 18)
+    host_s = (time.perf_counter() - t0) / 3
+    bytes_ = x.nbytes
+    return [{
+        "bench": "kernel_fingerprint", "bytes": bytes_,
+        "host_np_GBps": round(bytes_ / host_s / 1e9, 3),
+        "tpu_model_GBps": 819.0,
+        "tpu_model_ms_per_GiB": round(2**30 / 819e9 * 1e3, 3),
+        "note": "kernel validated in interpret mode; TPU rate = HBM roofline",
+    }]

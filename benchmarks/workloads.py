@@ -1,0 +1,138 @@
+"""Benchmark workloads: training-state session traces mirroring the
+paper's notebook scenarios (Table 1/2 analogues for a training fleet).
+
+A *trace* is a generator of (state, hints) checkpoints; `hints` may carry
+`touched_prefixes` / `readonly_paths` exactly as the train-step factory
+produces them.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+Hints = Dict[str, object]
+
+
+def _params(rng: np.random.Generator, *, n_layers=8, d=128, vocab=2048
+            ) -> Dict:
+    p = {"embed": rng.standard_normal((vocab, d)).astype(np.float32),
+         "final_norm": rng.standard_normal(d).astype(np.float32)}
+    layers = {}
+    for i in range(n_layers):
+        layers[str(i)] = {
+            "wq": rng.standard_normal((d, d)).astype(np.float32),
+            "wo": rng.standard_normal((d, d)).astype(np.float32),
+            "w_up": rng.standard_normal((d, 4 * d)).astype(np.float32),
+            "w_down": rng.standard_normal((4 * d, d)).astype(np.float32),
+        }
+    p["layers"] = layers
+    return p
+
+
+def finetune_trace(n_ckpts: int = 12, hot_layers: Tuple[int, ...] = (6, 7),
+                   seed: int = 0) -> Iterator[Tuple[Dict, Hints]]:
+    """Fine-tuning: only the top layers (+norm) move; the rest is frozen
+    (the paper's low-mutation-rate regime, <10%)."""
+    rng = np.random.default_rng(seed)
+    params = _params(rng)
+    frozen = [f"params/layers/{i}" for i in range(8) if i not in hot_layers]
+    frozen.append("params/embed")
+    for step in range(n_ckpts):
+        for i in hot_layers:
+            for k in params["layers"][str(i)]:
+                params["layers"][str(i)][k] = (
+                    params["layers"][str(i)][k]
+                    + rng.standard_normal(
+                        params["layers"][str(i)][k].shape).astype(np.float32)
+                    * 1e-3)
+        params["final_norm"] = params["final_norm"] + 1e-3
+        yield ({"params": params, "step": step},
+               {"readonly_paths": set(frozen)})
+
+
+def sparse_embedding_trace(n_ckpts: int = 12, rows: int = 16384, d: int = 64,
+                           rows_per_step: int = 32, seed: int = 0
+                           ) -> Iterator[Tuple[Dict, Hints]]:
+    """Sparse embedding-row updates (the paper's <2% mutation showcase)."""
+    rng = np.random.default_rng(seed)
+    emb = rng.standard_normal((rows, d)).astype(np.float32)
+    mu = np.zeros_like(emb)
+    for step in range(n_ckpts):
+        idx = rng.integers(0, rows, size=rows_per_step)
+        emb[idx] += 1e-2
+        mu[idx] = 0.9 * mu[idx] + 1e-2
+        yield ({"params": {"emb": emb}, "opt": {"mu": mu}, "step": step}, {})
+
+
+def moe_trace(n_ckpts: int = 10, n_experts: int = 64, touched: int = 8,
+              d: int = 64, ff: int = 128, seed: int = 0
+              ) -> Iterator[Tuple[Dict, Hints]]:
+    """MoE: per window only `touched` of `n_experts` receive tokens —
+    the touch report marks the rest provably clean."""
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((n_experts, d, ff)).astype(np.float32)
+    router = rng.standard_normal((d, n_experts)).astype(np.float32)
+    for step in range(n_ckpts):
+        idx = rng.choice(n_experts, size=touched, replace=False)
+        w[idx] += 1e-3
+        router += 1e-4
+        yield ({"params": {"experts": w, "router": router}, "step": step}, {})
+
+
+def serving_trace(n_ckpts: int = 10, B: int = 4, T: int = 512, hd: int = 128,
+                  slots_per_ckpt: int = 16, seed: int = 0
+                  ) -> Iterator[Tuple[Dict, Hints]]:
+    """KV-cache ring writes between session snapshots (append-mostly)."""
+    rng = np.random.default_rng(seed)
+    k = np.zeros((B, T, hd), np.float16)
+    v = np.zeros((B, T, hd), np.float16)
+    pos = 0
+    for step in range(n_ckpts):
+        for _ in range(slots_per_ckpt):
+            k[:, pos % T] = rng.standard_normal((B, hd)).astype(np.float16)
+            v[:, pos % T] = rng.standard_normal((B, hd)).astype(np.float16)
+            pos += 1
+        yield ({"cache": {"k": k, "v": v}, "pos": pos}, {})
+
+
+def full_pretrain_trace(n_ckpts: int = 6, seed: int = 0
+                        ) -> Iterator[Tuple[Dict, Hints]]:
+    """Pre-training: everything changes every window (the paper's >15%
+    regime — Chipmink's advantage shrinks but must not invert)."""
+    rng = np.random.default_rng(seed)
+    params = _params(rng, n_layers=4)
+    for step in range(n_ckpts):
+        def bump(t):
+            if isinstance(t, dict):
+                return {k: bump(v) for k, v in t.items()}
+            return t + rng.standard_normal(t.shape).astype(np.float32) * 1e-3
+        params = bump(params)
+        yield ({"params": params, "step": step}, {})
+
+
+def synthetic_lists_trace(n_ckpts: int = 10, n_lists: int = 100,
+                          strings: int = 512, str_bytes: int = 100,
+                          mutate_frac: float = 0.1, seed: int = 0
+                          ) -> Iterator[Tuple[Dict, Hints]]:
+    """Paper §8.5: N lists of byte strings; a fraction mutates per cell."""
+    rng = np.random.default_rng(seed)
+    lists = {f"l{i}": rng.integers(0, 256, size=(strings, str_bytes)
+                                   ).astype(np.uint8)
+             for i in range(n_lists)}
+    yield ({"ns": dict(lists)}, {})
+    for step in range(1, n_ckpts):
+        n_mut = int(round(mutate_frac * n_lists))
+        for i in rng.choice(n_lists, size=n_mut, replace=False):
+            arr = lists[f"l{i}"]
+            arr[rng.integers(0, strings)] = rng.integers(0, 256, str_bytes)
+        yield ({"ns": dict(lists)}, {})
+
+
+TRACES = {
+    "finetune": finetune_trace,
+    "sparse_emb": sparse_embedding_trace,
+    "moe": moe_trace,
+    "serving": serving_trace,
+    "pretrain": full_pretrain_trace,
+}

@@ -1,0 +1,26 @@
+"""Incremental serving-state persistence: batched decode with Chipmink
+session snapshots (preemption recovery / session migration).
+
+    PYTHONPATH=src python examples/incremental_serving.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import serve
+
+
+def main() -> None:
+    out = serve("starcoder2-3b", n_requests=4, gen_tokens=24, cache_len=64,
+                save_every=8, reduced=True)
+    stats = out["snap_stats"]
+    first, last = stats[0], stats[-1]
+    print(f"\nfirst snapshot wrote {first['bytes_written']/1e3:.1f} KB; "
+          f"steady-state snapshot wrote {last['bytes_written']/1e3:.1f} KB "
+          f"({last['bytes_written']/max(first['bytes_written'],1)*100:.0f}%)"
+          f" — ring-buffer deltas only")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: Chipmink-on-TPU — incremental delta-identified persistence for
+distributed JAX training state, plus the training/serving substrate."""
+__version__ = "1.0.0"

@@ -1,0 +1,22 @@
+"""Chipmink core: delta-identified incremental persistence (the paper's
+contribution), adapted to JAX training/serving state.
+
+Public API:
+    Chipmink          — save(state)->TimeID / load(names, time_id)
+    LGA, BundleAll, SplitAll, RandomPolicy, TbH, lga0, lga1
+    build_graph, pod_graph
+    MemoryStore, FileStore
+"""
+from .checkpoint import Chipmink, TimeID, reflow
+from .graph import ObjectGraph, build_graph, chunk_grid, rebuild_tree
+from .lga import (BUNDLE, SPLIT_CONTINUE, SPLIT_FINAL, BundleAll, LGA,
+                  PoddingPolicy, RandomPolicy, SplitAll, TbH, expected_cost,
+                  lga0, lga1)
+from .memo import CROSS_POD_OFFSET, GlobalMemoSpace
+from .podding import PodAssignment, Unpodder, pod_graph, serialize_pod
+from .store import BaseStore, FileStore, MemoryStore
+from .thesaurus import PodThesaurus
+from .volatility import (ConstantVolatility, FlipTracker, GBMVolatility,
+                         PriorVolatility, VolatilityModel)
+from .ascc import is_static_execution, readonly_state_leaves
+from .active_filter import ActiveVariableFilter

@@ -1,0 +1,152 @@
+"""Allowlist-based static code checker (paper §6.3), on jaxprs.
+
+The paper checks whether a Python cell is *static* (read-only) by matching
+its AST against an allowlist.  In JAX we can do strictly better: the step
+function's jaxpr tells us exactly how each output leaf was produced.  A
+state output leaf is *provably unchanged* when its output atom is the very
+input var (identity pass-through), possibly through an allowlist of
+value-preserving primitives (same-dtype convert_element_type, reshape to
+the same shape).  Like the paper's ASCC this is conservative: 100%
+precision (a leaf declared read-only truly is), recall < 100% (a leaf that
+is rewritten with identical values still counts as written).
+
+Uses: (1) the active-variable filter skips read-only leaves entirely;
+(2) async saving may safely donate/overwrite buffers of leaves the next
+execution provably does not rewrite (§6.2's lock analogue).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import numpy as np
+from jax.extend import core as jcore
+from jax.tree_util import tree_flatten, tree_leaves, tree_structure
+
+#: primitives through which a value provably passes unchanged (bitwise)
+_VALUE_PRESERVING = {"copy", "stop_gradient", "device_put"}
+
+
+def _flatten_paths(tree: Any, prefix: str = "") -> List[str]:
+    """Path strings for pytree leaves, mirroring graph._flatten_with_paths."""
+    out: List[str] = []
+
+    def walk(pre: Tuple[str, ...], x: Any) -> None:
+        if isinstance(x, dict):
+            for k in sorted(x.keys(), key=str):  # jax flattens dicts SORTED
+                walk(pre + (str(k),), x[k])
+        elif isinstance(x, (list, tuple)) and not hasattr(x, "shape"):
+            for i, v in enumerate(x):
+                walk(pre + (str(i),), v)
+        else:
+            out.append("/".join(pre))
+
+    walk((), tree)
+    return out
+
+
+def _inner_jaxpr(eqn) -> Optional[Any]:
+    """The sub-jaxpr of a call-like eqn (pjit / closed_call / remat...)."""
+    for key in ("jaxpr", "call_jaxpr"):
+        sub = eqn.params.get(key)
+        if sub is not None:
+            return getattr(sub, "jaxpr", sub)
+    return None
+
+
+def _trace_origin(var: Any, producers: Dict[Any, Any], depth: int = 0) -> Any:
+    """Follow value-preserving equations backwards, descending into
+    call-like eqns (jitted functions wrap the whole body in one pjit)."""
+    seen = 0
+    while var in producers and seen < 128 and depth < 8:
+        eqn = producers[var]
+        name = eqn.primitive.name
+        sub = _inner_jaxpr(eqn)
+        if sub is not None and len(sub.outvars) == len(eqn.outvars):
+            # descend: find which inner outvar feeds this outer outvar
+            idx = next(i for i, ov in enumerate(eqn.outvars) if ov is var)
+            inner_prod: Dict[Any, Any] = {}
+            for ie in sub.eqns:
+                for ov in ie.outvars:
+                    inner_prod[ov] = ie
+            inner = _trace_origin(sub.outvars[idx], inner_prod, depth + 1)
+            # inner invar k corresponds to outer eqn.invars[k]
+            try:
+                k = next(i for i, iv in enumerate(sub.invars) if iv is inner)
+            except StopIteration:
+                return var  # produced inside the call: not an identity
+            if k >= len(eqn.invars):
+                return var
+            var = eqn.invars[k]
+        elif name in _VALUE_PRESERVING and len(eqn.invars) == 1:
+            var = eqn.invars[0]
+        elif (name == "convert_element_type" and len(eqn.invars) == 1
+              and getattr(eqn.invars[0].aval, "dtype", None)
+              == getattr(eqn.outvars[0].aval, "dtype", None)):
+            var = eqn.invars[0]
+        elif (name == "reshape" and len(eqn.invars) == 1
+              and getattr(eqn.invars[0].aval, "shape", None)
+              == getattr(eqn.outvars[0].aval, "shape", None)):
+            var = eqn.invars[0]
+        else:
+            break
+        seen += 1
+    return var
+
+
+def readonly_state_leaves(step_fn: Callable, state: Any, *rest: Any,
+                          state_argnum: int = 0) -> Set[str]:
+    """Leaf paths of `state` that `step_fn` provably returns unchanged.
+
+    Convention: `step_fn(state, *rest)` returns the new state as its first
+    output (or as the whole output)."""
+    jaxpr = jax.make_jaxpr(step_fn)(state, *rest)
+
+    args = (state,) + tuple(rest)
+    state_leaves, state_def = tree_flatten(args[state_argnum])
+    n_before = sum(len(tree_leaves(a)) for a in args[:state_argnum])
+    in_state_vars = jaxpr.jaxpr.invars[n_before:n_before + len(state_leaves)]
+    paths = _flatten_paths(args[state_argnum])
+
+    producers: Dict[Any, Any] = {}
+    for eqn in jaxpr.jaxpr.eqns:
+        for ov in eqn.outvars:
+            producers[ov] = eqn
+
+    out_vars = [
+        _trace_origin(v, producers) if isinstance(v, jcore.Var) else v
+        for v in jaxpr.jaxpr.outvars
+    ]
+
+    # Match outputs positionally against the state prefix: the new state is
+    # the first len(state_leaves) outputs (step-fn convention).
+    readonly: Set[str] = set()
+    for idx, (path, invar) in enumerate(zip(paths, in_state_vars)):
+        if idx < len(out_vars) and out_vars[idx] is invar:
+            readonly.add(path)
+    return readonly
+
+
+def is_static_execution(step_fn: Callable, state: Any, *rest: Any) -> bool:
+    """Paper §6.3: an execution is *static* iff it provably rewrites no
+    state leaf — safe to run concurrently with an in-flight save."""
+    ro = readonly_state_leaves(step_fn, state, *rest)
+    paths = set(_flatten_paths(state))
+    return ro == paths
+
+
+# ---------------------------------------------------------------------------
+# Host-side allowlist (the paper's original AST-level checker), applied to
+# plain-python host callbacks (data-pipeline peeks, logging) which have no
+# jaxpr.  Prepopulated with definitely-static operations.
+# ---------------------------------------------------------------------------
+
+STATIC_HOST_ALLOWLIST = {
+    "len", "repr", "str", "print", "sum", "min", "max", "peek", "describe",
+}
+
+
+def host_call_is_static(op_name: str,
+                        allowlist: Optional[Set[str]] = None) -> bool:
+    allow = allowlist if allowlist is not None else STATIC_HOST_ALLOWLIST
+    return op_name in allow

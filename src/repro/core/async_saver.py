@@ -1,0 +1,68 @@
+"""Asynchronous saving (paper §6.1–§6.2).
+
+A single background *podding thread* runs the heavy half of a save
+(digesting, podding, serialization, storage writes) while the training/
+serving loop continues.  Two non-reentrant locks suffice (§6.2):
+
+  * ``l_ns``     — namespace lock: makes shared host-side structures
+                   (thesaurus, flip tracker, store indices) thread-safe;
+  * ``l_active`` — held for the duration of a save over the *active*
+                   variables.  On-device jax.Arrays are immutable, so the
+                   snapshot reference alone is the lock for device state;
+                   l_active guards host-mutable state (pipeline cursors)
+                   and the donation decision: a training step may donate
+                   the buffers of leaves the ASCC proved read-only, but
+                   must not donate active leaves while a save is in
+                   flight.
+
+Only one save may be in flight (paper: a new save joins the previous
+podding thread first).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Optional
+
+
+class AsyncSaver:
+    def __init__(self) -> None:
+        self.l_ns = threading.Lock()        # namespace lock
+        self.l_active = threading.Lock()    # active-variable lock
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    @property
+    def busy(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def wait(self) -> None:
+        """Join the in-flight save (and re-raise its error, if any)."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def submit(self, fn: Callable[[], Any]) -> None:
+        """Run `fn` on the podding thread; joins any previous save first."""
+        self.wait()
+
+        def run() -> None:
+            try:
+                with self.l_active:
+                    fn()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=run, name="chipmink-podding",
+                                        daemon=True)
+        self._thread.start()
+
+    def can_access(self, var_is_active: bool, static_execution: bool) -> bool:
+        """Paper §6 access rule: during an in-flight save, an execution may
+        proceed iff it touches only inactive variables or is provably
+        static (ASCC)."""
+        if not self.busy:
+            return True
+        return (not var_is_active) or static_execution

@@ -1,0 +1,81 @@
+"""Change detector (paper §4.2), device half + host bookkeeping.
+
+Per save, the detector digests every *active* chunk (Pallas kernel on
+device, numpy twin for host state) and compares against the previous digest
+table.  Inactive chunks inherit their previous digest without being touched
+— the active-variable-filter guarantee (Thm 4.1) makes that sound.
+
+Output: the new digest table + the set of dirty chunk keys.  Dirty chunks
+determine dirty pods; clean pods become synonym records (no payload write,
+no device→host transfer).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Optional, Set, Tuple
+
+import numpy as np
+
+from ..kernels import ops as kops
+from .graph import CHUNK, ObjectGraph
+
+
+@dataclasses.dataclass
+class ChangeReport:
+    digests: Dict[str, bytes]          # chunk key -> 16-byte digest
+    dirty: Set[str]                    # dirty chunk keys
+    active_chunks: int = 0
+    skipped_chunks: int = 0
+
+
+class ChangeDetector:
+    def __init__(self, *, chunk_bytes: int = 1 << 22, seed: int = 0,
+                 use_kernel: bool = True, interpret: bool = True):
+        self.chunk_bytes = chunk_bytes
+        self.seed = seed
+        self.use_kernel = use_kernel
+        self.interpret = interpret
+        self.prev: Dict[str, bytes] = {}
+
+    def detect(self, graph: ObjectGraph,
+               active_leaf_paths: Optional[Set[str]] = None) -> ChangeReport:
+        new_digests = kops.tree_fingerprint(
+            graph, active_leaf_paths=active_leaf_paths,
+            chunk_bytes=self.chunk_bytes, seed=self.seed,
+            use_kernel=self.use_kernel, interpret=self.interpret)
+
+        digests: Dict[str, bytes] = {}
+        dirty: Set[str] = set()
+        active = 0
+        skipped = 0
+        for node in graph.chunk_nodes():
+            key = node.key
+            if key in new_digests:
+                active += 1
+                d = new_digests[key]
+                digests[key] = d
+                if self.prev.get(key) != d:
+                    dirty.add(key)
+            else:
+                skipped += 1
+                prev = self.prev.get(key)
+                if prev is None:
+                    # never seen: must treat as dirty and digest it now
+                    lkey = "/".join(node.path)
+                    arr = graph.arrays[lkey]
+                    if isinstance(arr, np.ndarray):
+                        dig = kops.leaf_fingerprint_np(
+                            arr, chunk_bytes=self.chunk_bytes, seed=self.seed)
+                    else:
+                        dig = kops.leaf_fingerprint(
+                            arr, chunk_bytes=self.chunk_bytes, seed=self.seed,
+                            use_kernel=self.use_kernel,
+                            interpret=self.interpret)
+                    d = kops.digest_to_bytes(dig[node.chunk_index])
+                    digests[key] = d
+                    dirty.add(key)
+                else:
+                    digests[key] = prev
+        self.prev = digests
+        return ChangeReport(digests=digests, dirty=dirty,
+                            active_chunks=active, skipped_chunks=skipped)

@@ -1,0 +1,254 @@
+"""Chipmink: the object store (paper §3.1 user API + full save/load flow).
+
+    save(state) -> TimeID
+    load(names, time_id) -> {name: value}
+
+A save runs the paper's pipeline: build the ObjectGraph → active-variable
+filter → change detection (device fingerprints) → podding (LGA) → pod
+digests → thesaurus lookup (synonyms) → write dirty pods + manifest.
+A load reverses it: manifest → resolve pods (synonyms are content-addressed)
+→ unpod only what the requested names reach (partial loading).
+
+Ablation switches (`enable_cd`, `enable_avf`, `async_mode`) exist to
+reproduce the paper's §8.8/§8.9 baselines (NoCD/AVF, OnlyCD, OnlyAVF,
+Sync).
+"""
+from __future__ import annotations
+
+import hashlib
+import time as _time
+from typing import Any, Callable, Dict, Iterable, List, Optional, Set
+
+import numpy as np
+
+from .active_filter import ActiveVariableFilter
+from .async_saver import AsyncSaver
+from .change_detector import ChangeDetector
+from .graph import ObjectGraph, build_graph, rebuild_tree
+from .lga import LGA, PoddingPolicy
+from .memo import GlobalMemoSpace
+from .podding import (PodAssignment, Unpodder, pod_graph,
+                      pod_structural_digest, serialize_pod)
+from .store import BaseStore, MemoryStore
+from .thesaurus import PodThesaurus
+from .volatility import FlipTracker
+
+TimeID = int
+
+
+class Chipmink:
+    def __init__(
+        self,
+        store: Optional[BaseStore] = None,
+        policy: Optional[PoddingPolicy] = None,
+        *,
+        chunk_bytes: int = 1 << 22,
+        thesaurus_capacity: int = 1 << 30,
+        memo_page_size: int = 1024,
+        use_kernel: bool = True,
+        enable_cd: bool = True,
+        enable_avf: bool = True,
+        async_mode: bool = False,
+        track_flips: bool = True,
+        seed: int = 0,
+    ) -> None:
+        self.store = store if store is not None else MemoryStore()
+        self.policy = policy if policy is not None else LGA()
+        self.chunk_bytes = chunk_bytes
+        self.memo_page_size = memo_page_size
+        self.enable_cd = enable_cd
+        self.enable_avf = enable_avf
+        self.async_mode = async_mode
+        self.detector = ChangeDetector(chunk_bytes=chunk_bytes, seed=seed,
+                                       use_kernel=use_kernel)
+        self.thesaurus = PodThesaurus(capacity_bytes=thesaurus_capacity)
+        self.tracker = FlipTracker() if track_flips else None
+        self.avf = ActiveVariableFilter()
+        self.saver = AsyncSaver()
+        self._next_time: TimeID = 1
+        self._prev_pods: Optional[PodAssignment] = None
+        self._prev_graph: Optional[ObjectGraph] = None
+        self.save_stats: List[Dict[str, Any]] = []
+
+    # ------------------------------------------------------------------
+    # save
+    # ------------------------------------------------------------------
+    def save(
+        self,
+        state: Any,
+        *,
+        accessed_vars: Optional[Iterable[str]] = None,
+        touched_prefixes: Optional[Iterable[str]] = None,
+        readonly_paths: Optional[Set[str]] = None,
+        parent: Optional[TimeID] = None,
+    ) -> TimeID:
+        time_id = self._next_time
+        self._next_time += 1
+
+        t0 = _time.perf_counter()
+        graph = build_graph(state, chunk_bytes=self.chunk_bytes)
+        t_graph = _time.perf_counter() - t0
+
+        def work() -> None:
+            self._save_body(time_id, graph, accessed_vars, touched_prefixes,
+                            readonly_paths, parent, t_graph)
+
+        if self.async_mode:
+            self.saver.submit(work)   # joins any previous save first (§6.1)
+        else:
+            work()
+        return time_id
+
+    def wait(self) -> None:
+        self.saver.wait()
+
+    def _save_body(self, time_id, graph, accessed_vars, touched_prefixes,
+                   readonly_paths, parent, t_graph) -> None:
+        stats: Dict[str, Any] = {"time_id": time_id, "t_graph": t_graph}
+        t0 = _time.perf_counter()
+        if self.enable_avf:
+            active = self.avf.active_leaves(
+                graph,
+                readonly_paths=readonly_paths,
+                touched_prefixes=touched_prefixes,
+                prior_pods=self._prev_pods if accessed_vars is not None else None,
+                prior_graph=self._prev_graph,
+                accessed_vars=accessed_vars,
+            )
+        else:
+            active = {n.key for n in graph.leaf_nodes()}
+        stats["n_leaves"] = len(list(graph.leaf_nodes()))
+        stats["n_active_leaves"] = len(active)
+        stats["t_avf"] = _time.perf_counter() - t0
+
+        t0 = _time.perf_counter()
+        report = self.detector.detect(graph, active)
+        stats["n_chunks"] = len(report.digests)
+        stats["n_dirty_chunks"] = len(report.dirty)
+        stats["t_digest"] = _time.perf_counter() - t0
+
+        if self.tracker is not None:
+            active_chunks = [n.key for n in graph.chunk_nodes()
+                             if "/".join(n.path) in active]
+            self.tracker.observe(graph, report.dirty, active_chunks)
+
+        t0 = _time.perf_counter()
+        asg = pod_graph(graph, self.policy,
+                        flip_ema=self.tracker.ema if self.tracker else None,
+                        memo_page_size=self.memo_page_size)
+        stats["n_pods"] = len(asg.pods)
+        stats["t_podding"] = _time.perf_counter() - t0
+
+        t0 = _time.perf_counter()
+        pods_meta: Dict[int, Dict[str, Any]] = {}
+        written = aliased = 0
+        bytes_before = self.store.total_bytes()
+        for pid, pod in asg.pods.items():
+            digest = pod_structural_digest(pod, graph, asg, report.digests)
+            dig_hex = digest.hex()
+            skip = False
+            if self.enable_cd:
+                ref = self.thesaurus.lookup(digest)
+                if ref is not None:
+                    skip = True           # synonymous pod (§4.2)
+            if not skip:
+                if self.enable_cd:
+                    data = serialize_pod(pod, graph, asg)
+                    if self.store.put_pod(dig_hex, data):
+                        written += 1
+                    else:
+                        aliased += 1      # disk-level synonym
+                    self.thesaurus.insert(digest, dig_hex)
+                else:
+                    # NoCD baseline: every save writes unconditionally under
+                    # a unique key (true snapshot cost, no dedup).
+                    data = serialize_pod(pod, graph, asg)
+                    h = hashlib.blake2b(digest, digest_size=16,
+                                        person=b"nocd")
+                    h.update(time_id.to_bytes(8, "little"))
+                    dig_hex = h.hexdigest()
+                    self.store.put_pod(dig_hex, data)
+                    written += 1
+            else:
+                aliased += 1
+            pods_meta[pid] = {
+                "d": dig_hex,
+                "pages": asg.memo.pods[pid].pages if pid in asg.memo.pods else [],
+                "n": len(pod.node_ids),
+            }
+        stats["t_write"] = _time.perf_counter() - t0
+        stats["pods_written"] = written
+        stats["pods_aliased"] = aliased
+        stats["bytes_written"] = self.store.total_bytes() - bytes_before
+
+        manifest = {
+            "time_id": time_id,
+            "parent": parent,
+            "root_pod": asg.root_pod,
+            "page_size": self.memo_page_size,
+            "pods": {str(pid): meta for pid, meta in pods_meta.items()},
+            "stats": {k: v for k, v in stats.items()
+                      if isinstance(v, (int, float, str))},
+        }
+        self.store.put_manifest(time_id, manifest)
+        self._prev_pods = asg
+        self._prev_graph = graph
+        self.save_stats.append(stats)
+
+    # ------------------------------------------------------------------
+    # load
+    # ------------------------------------------------------------------
+    def _open(self, time_id: Optional[TimeID]) -> tuple:
+        if time_id is None:
+            tids = self.store.list_time_ids()
+            if not tids:
+                raise FileNotFoundError("no checkpoints in store")
+            time_id = tids[-1]
+        manifest = self.store.get_manifest(time_id)
+        pages = {int(pid): meta["pages"]
+                 for pid, meta in manifest["pods"].items()}
+        memo = GlobalMemoSpace.from_page_tables(
+            pages, page_size=manifest["page_size"])
+        digests = {int(pid): meta["d"] for pid, meta in manifest["pods"].items()}
+
+        def fetch(pod_id: int) -> bytes:
+            return self.store.get_pod(digests[pod_id])
+
+        return manifest, Unpodder(memo, fetch)
+
+    def load(self, names: Optional[Set[str]] = None,
+             time_id: Optional[TimeID] = None,
+             like: Any = None) -> Any:
+        """Restore variables.  `names=None` loads the full namespace;
+        otherwise only pods reachable from the requested variables are read
+        (partial loading, §3.1)."""
+        manifest, up = self._open(time_id)
+        root_pod = manifest["root_pod"]
+        root_entry = up.entry(root_pod, 0)
+        names_avail = root_entry["m"]["names"]
+        out: Dict[str, Any] = {}
+        for name, vid in zip(names_avail, root_entry["r"]):
+            if names is not None and name not in names:
+                continue
+            cp, cl = up.resolve(root_pod, vid)
+            out[name] = up.value(cp, cl)
+        self.last_load_pods = len(up.loaded_pods)
+        if like is not None:
+            return reflow(like, out)
+        return out
+
+
+def reflow(like: Any, loaded: Dict[str, Any]) -> Any:
+    """Re-flow loaded values into the structure of `like` (so custom pytree
+    containers survive a round-trip)."""
+    def walk(template: Any, value: Any) -> Any:
+        if isinstance(template, dict):
+            return {k: walk(template[k], value[k]) for k in template}
+        if isinstance(template, (list, tuple)) and not hasattr(template, "shape"):
+            t = type(template)
+            vals = [walk(t_i, value[str(i)] if isinstance(value, dict) else value[i])
+                    for i, t_i in enumerate(template)]
+            return t(vals)
+        return value
+
+    return walk(like, loaded)

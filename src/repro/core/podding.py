@@ -1,0 +1,285 @@
+"""Podding / unpodding engine (paper §4.1).
+
+Podding walks the ObjectGraph depth-first (serialization order) and, for
+each node, consults the podding policy: *bundle* into the current pod,
+*split-continue* into a fresh pod (descendants decided recursively), or
+*split-final* into a fresh pod that swallows the whole subtree.
+
+Each pod serializes to deterministic bytes (msgpack): an ordered list of
+node entries whose child references are **virtual memo IDs** — local
+natural numbers within the pod, `2^31 + global` across pods (see memo.py).
+Chunk entries carry the raw array bytes.
+
+Unpodding reverses the process: deserialize entries, resolve virtual memo
+IDs through the page tables, reassemble row-block chunks into arrays, and
+restore shared references as true aliases (same object), which is what
+makes Ser(Unpod(Pod(G))) = Ser(G) (Thm 7.1) hold.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+import msgpack
+import numpy as np
+
+from .graph import (ALIAS, CHUNK, CONTAINER, LEAF, SCALAR, Node, ObjectGraph,
+                    chunk_slice, path_str)
+from .lga import BUNDLE, SPLIT_CONTINUE, SPLIT_FINAL, PodState, PoddingPolicy
+from .memo import CROSS_POD_OFFSET, GlobalMemoSpace
+
+
+@dataclasses.dataclass
+class Pod:
+    pod_id: int
+    depth: int
+    node_ids: List[int] = dataclasses.field(default_factory=list)
+    size: float = 0.0
+    lam: float = 0.0
+
+
+@dataclasses.dataclass
+class PodAssignment:
+    pods: Dict[int, Pod]
+    node_pod: Dict[int, int]              # node_id -> pod_id
+    node_local: Dict[int, int]            # node_id -> local memo id in its pod
+    memo: GlobalMemoSpace
+    root_pod: int
+    edges: Set[Tuple[int, int]]           # PodGraph E_p (directed)
+
+    def pod_of_key(self, graph: ObjectGraph, key: str) -> int:
+        return self.node_pod[graph.by_key[key]]
+
+    def pod_graph_neighbors(self) -> Dict[int, Set[int]]:
+        """Undirected adjacency of the PodGraph (used by Thm 4.1 expansion)."""
+        adj: Dict[int, Set[int]] = {p: set() for p in self.pods}
+        for a, b in self.edges:
+            adj[a].add(b)
+            adj[b].add(a)
+        return adj
+
+
+def pod_graph(graph: ObjectGraph, policy: PoddingPolicy,
+              flip_ema: Optional[Dict[str, float]] = None,
+              memo_page_size: int = 1024) -> PodAssignment:
+    """Run podding over the graph with the given policy."""
+    policy.prepare(graph, flip_ema)
+    memo = GlobalMemoSpace(page_size=memo_page_size)
+    pods: Dict[int, Pod] = {}
+    node_pod: Dict[int, int] = {}
+    node_local: Dict[int, int] = {}
+    edges: Set[Tuple[int, int]] = set()
+    next_pod = [0]
+
+    def new_pod(depth: int) -> Pod:
+        p = Pod(pod_id=next_pod[0], depth=depth)
+        next_pod[0] += 1
+        pods[p.pod_id] = p
+        return p
+
+    def admit(node: Node, pod: Pod) -> None:
+        node_pod[node.node_id] = pod.pod_id
+        node_local[node.node_id] = memo.new_local(pod.pod_id)
+        pod.node_ids.append(node.node_id)
+        pod.size += float(node.size)
+        pod.lam += policy.lam(node)
+
+    root = graph.node(graph.root_id)
+    root_pod = new_pod(depth=0)
+    admit(root, root_pod)
+
+    # iterative DFS: (node_id, current_pod_id, forced) — forced inside a
+    # split-final subtree means all descendants bundle without consulting.
+    stack: List[Tuple[int, int, bool]] = [
+        (cid, root_pod.pod_id, False) for cid in reversed(root.children)]
+    while stack:
+        nid, cur_pid, forced = stack.pop()
+        node = graph.node(nid)
+        cur = pods[cur_pid]
+        if forced:
+            action = BUNDLE
+        else:
+            action = policy.decide(
+                node, PodState(pod_id=cur.pod_id, depth=cur.depth,
+                               size=cur.size, lam=cur.lam))
+        if action == BUNDLE:
+            admit(node, cur)
+            child_pid, child_forced = cur.pod_id, forced
+        else:
+            child = new_pod(depth=cur.depth + 1)
+            admit(node, child)
+            edges.add((cur.pod_id, child.pod_id))
+            child_pid = child.pod_id
+            child_forced = action == SPLIT_FINAL
+        for cid in reversed(node.children):
+            stack.append((cid, child_pid, child_forced))
+
+    # alias edges: a pod referencing a canonical leaf in another pod
+    for n in graph.nodes.values():
+        if n.kind == ALIAS and n.alias_of is not None:
+            canon_id = graph.by_key.get(path_str(n.alias_of))
+            if canon_id is not None:
+                pa, pb = node_pod[n.node_id], node_pod[canon_id]
+                if pa != pb:
+                    edges.add((pa, pb))
+
+    return PodAssignment(pods=pods, node_pod=node_pod, node_local=node_local,
+                         memo=memo, root_pod=root_pod.pod_id, edges=edges)
+
+
+# --------------------------------------------------------------------------
+# Pod serialization
+# --------------------------------------------------------------------------
+
+def _entry_for_node(node: Node, graph: ObjectGraph, asg: PodAssignment,
+                    chunk_bytes_of: Callable[[Node], bytes]) -> Dict[str, Any]:
+    """Build the serializable entry of one node.  Child references are
+    virtual memo IDs."""
+    pid = asg.node_pod[node.node_id]
+    refs = [
+        asg.memo.virtual_for_ref(pid, asg.node_pod[cid], asg.node_local[cid])
+        for cid in node.children
+    ]
+    e: Dict[str, Any] = {
+        "k": node.key,
+        "t": node.kind,
+        "r": refs,
+    }
+    if node.kind == LEAF:
+        e["m"] = {"shape": list(node.shape or ()), "dtype": node.dtype,
+                  "rows": node.chunk_rows}
+    elif node.kind == CHUNK:
+        e["m"] = {"ci": node.chunk_index}
+        e["d"] = chunk_bytes_of(node)
+    elif node.kind == SCALAR:
+        e["m"] = {"v": node.value}
+    elif node.kind == ALIAS:
+        canon_key = path_str(node.alias_of or ())
+        canon_id = graph.by_key[canon_key]
+        e["m"] = {"ref": asg.memo.virtual_for_ref(
+            pid, asg.node_pod[canon_id], asg.node_local[canon_id]),
+            "key": canon_key}
+    else:  # container
+        e["m"] = {"names": [graph.node(c).path[-1] if graph.node(c).path else ""
+                            for c in node.children]}
+    return e
+
+
+def default_chunk_bytes(graph: ObjectGraph) -> Callable[[Node], bytes]:
+    def get(node: Node) -> bytes:
+        arr = graph.arrays[path_str(node.path)]
+        part = chunk_slice(arr, node)
+        host = np.asarray(part)  # device_get for jax arrays
+        return host.tobytes()
+    return get
+
+
+def serialize_pod(pod: Pod, graph: ObjectGraph, asg: PodAssignment,
+                  chunk_bytes_of: Optional[Callable[[Node], bytes]] = None
+                  ) -> bytes:
+    chunk_bytes_of = chunk_bytes_of or default_chunk_bytes(graph)
+    entries = [
+        _entry_for_node(graph.node(nid), graph, asg, chunk_bytes_of)
+        for nid in pod.node_ids
+    ]
+    payload = {"pid": pod.pod_id, "e": entries}
+    return msgpack.packb(payload, use_bin_type=True)
+
+
+def pod_structural_digest(pod: Pod, graph: ObjectGraph, asg: PodAssignment,
+                          chunk_digests: Dict[str, bytes]) -> bytes:
+    """128-bit pod digest without touching payload bytes: structure +
+    device-computed chunk digests.  This is what lets the change detector
+    skip the device→host transfer for clean pods entirely."""
+    h = hashlib.blake2b(digest_size=16)
+    for nid in pod.node_ids:
+        node = graph.node(nid)
+        h.update(node.key.encode())
+        h.update(node.kind.encode())
+        if node.kind == CHUNK:
+            h.update(chunk_digests[node.key])
+        elif node.kind == SCALAR:
+            h.update(repr(node.value).encode())
+        elif node.kind == LEAF:
+            h.update(repr((node.shape, node.dtype, node.chunk_rows)).encode())
+        elif node.kind == ALIAS:
+            h.update(path_str(node.alias_of or ()).encode())
+        pid = asg.node_pod[nid]
+        for cid in node.children:
+            v = asg.memo.virtual_for_ref(pid, asg.node_pod[cid],
+                                         asg.node_local[cid])
+            h.update(v.to_bytes(8, "little"))
+    return h.digest()
+
+
+# --------------------------------------------------------------------------
+# Unpodding
+# --------------------------------------------------------------------------
+
+class Unpodder:
+    """Assemble objects back from pod bytes, loading dependent pods lazily
+    through `fetch_pod(pod_id) -> bytes` (the storage read path)."""
+
+    def __init__(self, memo: GlobalMemoSpace,
+                 fetch_pod: Callable[[int], bytes]):
+        self.memo = memo
+        self.fetch_pod = fetch_pod
+        self._pod_entries: Dict[int, List[Dict[str, Any]]] = {}
+        self._values: Dict[Tuple[int, int], Any] = {}  # (pod, local) -> value
+        self.loaded_pods: Set[int] = set()
+
+    def _entries(self, pod_id: int) -> List[Dict[str, Any]]:
+        if pod_id not in self._pod_entries:
+            raw = self.fetch_pod(pod_id)
+            obj = msgpack.unpackb(raw, raw=False)
+            self._pod_entries[pod_id] = obj["e"]
+            self.loaded_pods.add(pod_id)
+        return self._pod_entries[pod_id]
+
+    def entry(self, pod_id: int, local: int) -> Dict[str, Any]:
+        return self._entries(pod_id)[local]
+
+    def resolve(self, ctx_pod: int, vid: int) -> Tuple[int, int]:
+        return self.memo.resolve(ctx_pod, vid)
+
+    def value(self, pod_id: int, local: int) -> Any:
+        """Materialize the object at (pod, local): arrays for LEAF, the
+        canonical array for ALIAS, python value for SCALAR, dict for
+        CONTAINER."""
+        key = (pod_id, local)
+        if key in self._values:
+            return self._values[key]
+        e = self.entry(pod_id, local)
+        kind = e["t"]
+        if kind == SCALAR:
+            val = e["m"]["v"]
+        elif kind == LEAF:
+            meta = e["m"]
+            shape = tuple(meta["shape"])
+            dtype = np.dtype(meta["dtype"])
+            parts = []
+            for vid in e["r"]:
+                cp, cl = self.resolve(pod_id, vid)
+                ce = self.entry(cp, cl)
+                parts.append(ce["d"])
+            buf = b"".join(parts)
+            arr = np.frombuffer(buf, dtype=dtype)
+            count = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            arr = arr[:count].reshape(shape)
+            val = arr
+        elif kind == ALIAS:
+            cp, cl = self.resolve(pod_id, e["m"]["ref"])
+            val = self.value(cp, cl)
+        elif kind == CONTAINER:
+            names = e["m"]["names"]
+            val = {}
+            for name, vid in zip(names, e["r"]):
+                cp, cl = self.resolve(pod_id, vid)
+                val[name] = self.value(cp, cl)
+        elif kind == CHUNK:
+            val = e["d"]
+        else:
+            raise ValueError(f"unknown node kind {kind!r}")
+        self._values[key] = val
+        return val

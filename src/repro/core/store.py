@@ -1,0 +1,180 @@
+"""Underlying storage: content-addressed pod store + manifests.
+
+Pods are written once per unique digest (synonymous pods point at the same
+object — the synonym resolver of §4.2 realized as content addressing), with
+optional zstd compression (the paper's §8.3 LZ4 analog).  Manifests record,
+per TimeID: the pod table (pod id → digest, page table, parent), the root
+pod, per-save statistics, and the parent TimeID (branching/versioning).
+
+Two backends share one interface: a filesystem store (production path) and
+an in-memory store (benchmarks measure logical bytes without disk noise).
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import Any, Dict, Iterable, List, Optional
+
+import msgpack
+
+try:
+    import zstandard as zstd
+except Exception:  # pragma: no cover
+    zstd = None
+
+
+class StoreStats:
+    def __init__(self) -> None:
+        self.pod_bytes_written = 0
+        self.pods_written = 0
+        self.pods_deduped = 0
+        self.manifest_bytes = 0
+        self.reads = 0
+        self.read_bytes = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dict(self.__dict__)
+
+
+class BaseStore:
+    compress: bool = False
+
+    def __init__(self) -> None:
+        self.stats = StoreStats()
+        self._lock = threading.Lock()
+
+    # -- pods -------------------------------------------------------------
+    def has_pod(self, digest_hex: str) -> bool:
+        raise NotImplementedError
+
+    def _put_raw(self, digest_hex: str, data: bytes) -> None:
+        raise NotImplementedError
+
+    def _get_raw(self, digest_hex: str) -> bytes:
+        raise NotImplementedError
+
+    def put_pod(self, digest_hex: str, data: bytes) -> bool:
+        """Write pod bytes unless already present.  Returns True if written."""
+        with self._lock:
+            if self.has_pod(digest_hex):
+                self.stats.pods_deduped += 1
+                return False
+            blob = data
+            if self.compress and zstd is not None:
+                blob = zstd.ZstdCompressor(level=3).compress(data)
+            self._put_raw(digest_hex, blob)
+            self.stats.pods_written += 1
+            self.stats.pod_bytes_written += len(blob)
+            return True
+
+    def get_pod(self, digest_hex: str) -> bytes:
+        with self._lock:
+            blob = self._get_raw(digest_hex)
+            self.stats.reads += 1
+            self.stats.read_bytes += len(blob)
+        if self.compress and zstd is not None:
+            return zstd.ZstdDecompressor().decompress(blob)
+        return blob
+
+    # -- manifests ----------------------------------------------------------
+    def put_manifest(self, time_id: int, manifest: Dict[str, Any]) -> None:
+        raise NotImplementedError
+
+    def get_manifest(self, time_id: int) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def list_time_ids(self) -> List[int]:
+        raise NotImplementedError
+
+    def total_bytes(self) -> int:
+        return self.stats.pod_bytes_written + self.stats.manifest_bytes
+
+
+class MemoryStore(BaseStore):
+    def __init__(self, compress: bool = False) -> None:
+        super().__init__()
+        self.compress = compress
+        self._pods: Dict[str, bytes] = {}
+        self._manifests: Dict[int, bytes] = {}
+
+    def has_pod(self, digest_hex: str) -> bool:
+        return digest_hex in self._pods
+
+    def _put_raw(self, digest_hex: str, data: bytes) -> None:
+        self._pods[digest_hex] = data
+
+    def _get_raw(self, digest_hex: str) -> bytes:
+        return self._pods[digest_hex]
+
+    def put_manifest(self, time_id: int, manifest: Dict[str, Any]) -> None:
+        blob = msgpack.packb(manifest, use_bin_type=True)
+        self._manifests[time_id] = blob
+        self.stats.manifest_bytes += len(blob)
+
+    def get_manifest(self, time_id: int) -> Dict[str, Any]:
+        return msgpack.unpackb(self._manifests[time_id], raw=False,
+                               strict_map_key=False)
+
+    def list_time_ids(self) -> List[int]:
+        return sorted(self._manifests)
+
+
+class FileStore(BaseStore):
+    """store_dir/pods/<d0d1>/<digest>.pod  +  store_dir/manifests/<tid>.mp"""
+
+    def __init__(self, root: str, compress: bool = False) -> None:
+        super().__init__()
+        self.root = root
+        self.compress = compress
+        os.makedirs(os.path.join(root, "pods"), exist_ok=True)
+        os.makedirs(os.path.join(root, "manifests"), exist_ok=True)
+
+    def _pod_path(self, digest_hex: str) -> str:
+        d = os.path.join(self.root, "pods", digest_hex[:2])
+        return os.path.join(d, digest_hex + ".pod")
+
+    def has_pod(self, digest_hex: str) -> bool:
+        return os.path.exists(self._pod_path(digest_hex))
+
+    def _put_raw(self, digest_hex: str, data: bytes) -> None:
+        path = self._pod_path(digest_hex)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)  # atomic: crash-safe (fault tolerance)
+
+    def _get_raw(self, digest_hex: str) -> bytes:
+        with open(self._pod_path(digest_hex), "rb") as f:
+            return f.read()
+
+    def _manifest_path(self, time_id: int) -> str:
+        return os.path.join(self.root, "manifests", f"{time_id:08d}.mp")
+
+    def put_manifest(self, time_id: int, manifest: Dict[str, Any]) -> None:
+        blob = msgpack.packb(manifest, use_bin_type=True)
+        tmp = self._manifest_path(time_id) + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, self._manifest_path(time_id))
+        with open(os.path.join(self.root, "HEAD"), "w") as f:
+            f.write(str(time_id))
+        self.stats.manifest_bytes += len(blob)
+
+    def get_manifest(self, time_id: int) -> Dict[str, Any]:
+        with open(self._manifest_path(time_id), "rb") as f:
+            return msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
+
+    def head(self) -> Optional[int]:
+        try:
+            with open(os.path.join(self.root, "HEAD")) as f:
+                return int(f.read().strip())
+        except FileNotFoundError:
+            return None
+
+    def list_time_ids(self) -> List[int]:
+        out = []
+        for fn in os.listdir(os.path.join(self.root, "manifests")):
+            if fn.endswith(".mp"):
+                out.append(int(fn[:-3]))
+        return sorted(out)

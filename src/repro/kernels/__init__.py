@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for Chipmink's perf-critical hot spot: on-device
+chunk fingerprinting (change detection at HBM bandwidth)."""
+from . import ops, ref
+from .fingerprint import fingerprint_words
+from .ops import leaf_fingerprint, leaf_fingerprint_np, tree_fingerprint

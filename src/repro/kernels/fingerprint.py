@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: chunk fingerprint digest at HBM bandwidth.
+
+The paper's change detector hashes pod bytes with xxhash on the host CPU
+(§4.2).  On a TPU fleet that design would force every byte of training
+state across the device→host link each save.  The TPU-native adaptation
+computes the 128-bit digest *on device*:
+
+  * the word stream of each chunk is tiled into (1, TILE) uint32 VMEM
+    blocks (TILE = 4096 words = 16 KiB; last-dim multiple of 128 lanes),
+  * per block, four weighted sums are accumulated on the VPU (integer
+    multiply-add only; no MXU) — arithmetic intensity ≈ 1 op/byte, so the
+    kernel is memory-bound by construction and runs at HBM rate
+    (~819 GB/s on v5e vs ~10-30 GB/s/core for host xxhash behind a
+    ~16 GB/s PCIe hop),
+  * only 16 bytes per chunk leave the device; clean chunks never move.
+
+The digest spec (and the oracle) live in ref.py; weighted sums are
+order-independent, so the sequential TPU grid can accumulate partial tile
+sums into the (1, 4) output block, which is revisited across the inner
+grid dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import DIGEST_WORDS, LANE_PRIMES, PHI32, STREAM_SALT, mix32
+
+TILE = 4096  # uint32 words per VMEM block (16 KiB); multiple of 128 lanes
+
+
+def _fingerprint_kernel(words_ref, lengths_ref, out_ref, *, seed: int,
+                        tile: int):
+    """Grid = (C, W // tile).  Block shapes: words (1, tile), lengths (1, 1),
+    out (1, DIGEST_WORDS) revisited along the inner grid dim."""
+    j = pl.program_id(1)
+    base = (j * tile).astype(jnp.uint32)
+    pos = base + jax.lax.broadcasted_iota(jnp.uint32, (1, tile), 1)
+    x = words_ref[...].astype(jnp.uint32)
+
+    partial = []
+    for d in range(DIGEST_WORDS):
+        w = mix32(pos * jnp.uint32(LANE_PRIMES[d]) + jnp.uint32(seed)
+                  + jnp.uint32((d * STREAM_SALT) & 0xFFFFFFFF))
+        partial.append(jnp.sum(x * w, dtype=jnp.uint32))
+    part = jnp.stack(partial).reshape(1, DIGEST_WORDS)
+
+    @pl.when(j == 0)
+    def _init():
+        length = lengths_ref[0, 0].astype(jnp.uint32)
+        folds = []
+        for d in range(DIGEST_WORDS):
+            folds.append(mix32(length ^ jnp.uint32(((d + 1) * PHI32) & 0xFFFFFFFF))
+                         + jnp.uint32(seed))
+        out_ref[...] = jnp.stack(folds).reshape(1, DIGEST_WORDS)
+
+    out_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("seed", "interpret", "tile"))
+def fingerprint_words(words: jnp.ndarray, lengths: jnp.ndarray, *,
+                      seed: int = 0, interpret: bool = True,
+                      tile: int = TILE) -> jnp.ndarray:
+    """Digest uint32 words (C, W) -> uint32 (C, 4) via the Pallas kernel.
+
+    W is padded to a multiple of `tile` (zero words are digest-neutral;
+    true byte lengths are folded separately — see ref.py).
+    """
+    words = jnp.asarray(words, jnp.uint32)
+    C, W = words.shape
+    Wp = max(tile, -(-W // tile) * tile)
+    if Wp != W:
+        words = jnp.pad(words, ((0, 0), (0, Wp - W)))
+    lengths2d = jnp.asarray(lengths, jnp.uint32).reshape(C, 1)
+
+    grid = (C, Wp // tile)
+    return pl.pallas_call(
+        functools.partial(_fingerprint_kernel, seed=seed, tile=tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, DIGEST_WORDS), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, DIGEST_WORDS), jnp.uint32),
+        interpret=interpret,
+    )(words, lengths2d)

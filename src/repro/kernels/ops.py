@@ -1,0 +1,143 @@
+"""jit'd wrappers around the fingerprint kernel: arrays & pytrees → digests.
+
+`leaf_fingerprint` converts an array of any dtype into the canonical uint32
+word stream, splits it on the ObjectGraph's deterministic row-block grid,
+and returns one 128-bit digest per chunk.  `tree_fingerprint` maps the graph
+of a state pytree to a {chunk key → digest bytes} table — the device half of
+the change detector (§4.2).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.graph import ObjectGraph, chunk_grid
+from .fingerprint import fingerprint_words
+from .ref import fingerprint_words_np, fingerprint_words_ref
+
+
+def to_words(arr: jnp.ndarray) -> jnp.ndarray:
+    """Bitcast any-dtype array to a flat uint32 word stream (device-side).
+
+    itemsize 4 → direct bitcast; 2 → pack pairs little-endian; 1 → pack
+    quads; 8 → bitcast to 2×uint32.  Trailing bytes are zero-padded (the
+    digest folds true lengths separately)."""
+    if arr.dtype == jnp.bool_:
+        arr = arr.astype(jnp.uint8)
+    flat = arr.reshape(-1)
+    isz = np.dtype(arr.dtype).itemsize
+    if isz == 4:
+        return jax.lax.bitcast_convert_type(flat, jnp.uint32)
+    if isz == 8:
+        return jax.lax.bitcast_convert_type(flat, jnp.uint32).reshape(-1)
+    if isz == 2:
+        u16 = jax.lax.bitcast_convert_type(flat, jnp.uint16)
+        if u16.shape[0] % 2:
+            u16 = jnp.pad(u16, (0, 1))
+        u16 = u16.reshape(-1, 2).astype(jnp.uint32)
+        return u16[:, 0] | (u16[:, 1] << jnp.uint32(16))
+    if isz == 1:
+        u8 = jax.lax.bitcast_convert_type(flat, jnp.uint8)
+        pad = (-u8.shape[0]) % 4
+        if pad:
+            u8 = jnp.pad(u8, (0, pad))
+        u8 = u8.reshape(-1, 4).astype(jnp.uint32)
+        return (u8[:, 0] | (u8[:, 1] << jnp.uint32(8))
+                | (u8[:, 2] << jnp.uint32(16)) | (u8[:, 3] << jnp.uint32(24)))
+    raise ValueError(f"unsupported itemsize {isz}")
+
+
+def to_words_np(arr: np.ndarray) -> np.ndarray:
+    """Host (numpy) twin of to_words — bit-identical."""
+    a = np.asarray(arr)
+    if a.dtype == np.bool_:
+        a = a.astype(np.uint8)
+    raw = a.tobytes()
+    pad = (-len(raw)) % 4
+    if pad:
+        raw += b"\0" * pad
+    return np.frombuffer(raw, dtype="<u4").copy()
+
+
+def leaf_fingerprint(arr: Any, *, chunk_bytes: int = 1 << 22, seed: int = 0,
+                     use_kernel: bool = True, interpret: bool = True
+                     ) -> np.ndarray:
+    """Digest one array on its flat-range chunk grid → uint32 (n_chunks, 4)."""
+    arr = jnp.asarray(arr)
+    shape = tuple(int(d) for d in arr.shape)
+    dtype = np.dtype(arr.dtype)
+    elems, n_chunks = chunk_grid(shape, dtype, chunk_bytes)
+    total = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    nbytes = total * dtype.itemsize
+
+    if n_chunks == 1:
+        words = to_words(arr)[None, :]
+        lengths = jnp.asarray([nbytes], jnp.uint32)
+    else:
+        flat = arr.reshape(-1)
+        pad = n_chunks * elems - total
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        words = to_words(flat)
+        words = words.reshape(n_chunks, words.shape[0] // n_chunks)
+        lens = np.full((n_chunks,), elems * dtype.itemsize, dtype=np.uint32)
+        lens[-1] = nbytes - (n_chunks - 1) * elems * dtype.itemsize
+        lengths = jnp.asarray(lens)
+
+    if use_kernel:
+        dig = fingerprint_words(words, lengths, seed=seed, interpret=interpret)
+    else:
+        dig = fingerprint_words_ref(words, lengths, seed=seed)
+    return np.asarray(jax.device_get(dig))
+
+
+def leaf_fingerprint_np(arr: np.ndarray, *, chunk_bytes: int = 1 << 22,
+                        seed: int = 0) -> np.ndarray:
+    """Pure-host twin for numpy state (data-pipeline cursors etc.)."""
+    a = np.asarray(arr)
+    shape = a.shape
+    dtype = a.dtype
+    elems, n_chunks = chunk_grid(shape, dtype, chunk_bytes)
+    total = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    nbytes = int(a.nbytes)
+    if n_chunks == 1:
+        words = to_words_np(a)[None, :]
+        lengths = np.asarray([nbytes], np.uint32)
+    else:
+        flat = a.reshape(-1)
+        pad = n_chunks * elems - total
+        if pad:
+            flat = np.pad(flat, (0, pad))
+        words = to_words_np(flat)
+        words = words.reshape(n_chunks, words.shape[0] // n_chunks)
+        lengths = np.full((n_chunks,), elems * dtype.itemsize, dtype=np.uint32)
+        lengths[-1] = nbytes - (n_chunks - 1) * elems * dtype.itemsize
+    return fingerprint_words_np(words, lengths, seed=seed)
+
+
+def digest_to_bytes(row: np.ndarray) -> bytes:
+    return np.asarray(row, np.uint32).tobytes()
+
+
+def tree_fingerprint(graph: ObjectGraph, *, active_leaf_paths=None,
+                     chunk_bytes: int = 1 << 22, seed: int = 0,
+                     use_kernel: bool = True, interpret: bool = True
+                     ) -> Dict[str, bytes]:
+    """Digest every chunk of (active) leaves → {chunk key: 16-byte digest}."""
+    out: Dict[str, bytes] = {}
+    for leaf in graph.leaf_nodes():
+        lkey = leaf.key
+        if active_leaf_paths is not None and lkey not in active_leaf_paths:
+            continue
+        arr = graph.arrays[lkey]
+        if isinstance(arr, np.ndarray):
+            dig = leaf_fingerprint_np(arr, chunk_bytes=chunk_bytes, seed=seed)
+        else:
+            dig = leaf_fingerprint(arr, chunk_bytes=chunk_bytes, seed=seed,
+                                   use_kernel=use_kernel, interpret=interpret)
+        for ci in range(dig.shape[0]):
+            out[f"{lkey}#[{ci}]"] = digest_to_bytes(dig[ci])
+    return out

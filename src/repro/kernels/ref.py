@@ -1,0 +1,88 @@
+"""Pure-jnp oracle for the chunk fingerprint digest.
+
+Digest spec (all arithmetic uint32, wrap-around mod 2^32):
+
+    weight_j(i) = mix32(i * A_j + seed + j * 0x632BE59B)
+    sum_j(c)    = Σ_i words[c, i] * weight_j(i)
+    digest[c,j] = sum_j(c) + mix32(lengths[c] ^ ((j+1) * 0x9E3779B9) + seed)
+
+where mix32 is the xorshift-multiply avalanche
+
+    z ^= z >> 16;  z *= 0x7FEB352D;  z ^= z >> 15;  z *= 0x846CA68B;  z ^= z >> 16
+
+and A_j are four odd xxhash-style primes.  The per-word contribution is a
+weighted sum — order independent — so the Pallas kernel can tile the word
+stream arbitrarily and accumulate partial sums; zero padding contributes
+nothing, and true byte lengths are folded in separately to distinguish
+trailing-zero content from padding.
+
+This module is the correctness oracle; a bit-identical numpy version is
+provided for host-side state, and the Pallas kernel in fingerprint.py must
+match both exactly (integer math — zero tolerance).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+#: four odd 32-bit multipliers (xxhash/murmur lineage)
+LANE_PRIMES = (0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F)
+PHI32 = 0x9E3779B9
+STREAM_SALT = 0x632BE59B
+DIGEST_WORDS = 4
+
+
+def mix32(z: jnp.ndarray) -> jnp.ndarray:
+    z = jnp.asarray(z, jnp.uint32)
+    z = z ^ (z >> jnp.uint32(16))
+    z = z * jnp.uint32(0x7FEB352D)
+    z = z ^ (z >> jnp.uint32(15))
+    z = z * jnp.uint32(0x846CA68B)
+    z = z ^ (z >> jnp.uint32(16))
+    return z
+
+
+def mix32_np(z: np.ndarray) -> np.ndarray:
+    z = np.asarray(z, np.uint32)
+    z = z ^ (z >> np.uint32(16))
+    z = (z * np.uint32(0x7FEB352D)).astype(np.uint32)
+    z = z ^ (z >> np.uint32(15))
+    z = (z * np.uint32(0x846CA68B)).astype(np.uint32)
+    z = z ^ (z >> np.uint32(16))
+    return z
+
+
+def fingerprint_words_ref(words: jnp.ndarray, lengths: jnp.ndarray,
+                          seed: int = 0) -> jnp.ndarray:
+    """Oracle digest.  words: uint32 (C, W); lengths: uint32 (C,).
+    Returns uint32 (C, 4)."""
+    words = jnp.asarray(words, jnp.uint32)
+    C, W = words.shape
+    i = jnp.arange(W, dtype=jnp.uint32)
+    out = []
+    for j in range(DIGEST_WORDS):
+        w = mix32(i * jnp.uint32(LANE_PRIMES[j]) + jnp.uint32(seed)
+                  + jnp.uint32((j * STREAM_SALT) & 0xFFFFFFFF))
+        s = jnp.sum(words * w[None, :], axis=1, dtype=jnp.uint32)
+        fold = mix32(jnp.asarray(lengths, jnp.uint32)
+                     ^ jnp.uint32(((j + 1) * PHI32) & 0xFFFFFFFF))
+        out.append(s + fold + jnp.uint32(seed))
+    return jnp.stack(out, axis=1)
+
+
+def fingerprint_words_np(words: np.ndarray, lengths: np.ndarray,
+                         seed: int = 0) -> np.ndarray:
+    """Bit-identical numpy implementation (host-side state hashing)."""
+    words = np.asarray(words, np.uint32)
+    C, W = words.shape
+    i = np.arange(W, dtype=np.uint32)
+    out = np.zeros((C, DIGEST_WORDS), dtype=np.uint32)
+    with np.errstate(over="ignore"):
+        for j in range(DIGEST_WORDS):
+            w = mix32_np((i * np.uint32(LANE_PRIMES[j])).astype(np.uint32)
+                         + np.uint32(seed) + np.uint32((j * STREAM_SALT) & 0xFFFFFFFF))
+            s = (words * w[None, :]).astype(np.uint32).sum(axis=1, dtype=np.uint32)
+            fold = mix32_np(np.asarray(lengths, np.uint32)
+                            ^ np.uint32(((j + 1) * PHI32) & 0xFFFFFFFF))
+            out[:, j] = (s + fold + np.uint32(seed)).astype(np.uint32)
+    return out

@@ -1,0 +1,334 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) cell, prove memory fit, and extract roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+        --shape train_4k [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Per cell this produces experiments/dryrun/<arch>__<shape>__<mesh>.json:
+memory_analysis (per-device bytes — the v5e 16 GB fit proof),
+cost_analysis (per-device HLO FLOPs/bytes; while bodies counted once —
+see roofline harness notes), and the collective schedule parsed from the
+SPMD-partitioned HLO (op kind, dtype, per-device operand bytes, group
+size, wire-byte estimate)."""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+from collections import Counter, defaultdict
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCHS, SHAPES, applicable_shapes, get_config
+from ..models.model import (abstract_model_params, api, input_specs,
+                            model_flops, model_logical_axes)
+from ..parallel.sharding import (batch_spec, set_active_mesh, spec_for,
+                                 tree_shardings)
+from ..train.optimizer import OptConfig, opt_axes
+from ..train.train_step import make_train_step
+from ..train.serve_step import make_decode_step, make_prefill_step
+from .mesh import make_production_mesh, mesh_chips
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "experiments", "dryrun")
+
+_DTYPE_BYTES = {
+    "f32": 4, "f16": 2, "bf16": 2, "f64": 8, "s32": 4, "u32": 4, "s8": 1,
+    "u8": 1, "s16": 2, "u16": 2, "pred": 1, "s64": 8, "u64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"(\w+)\[([\d,]*)\][^=]*?\s(all-reduce|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute)(?:-start)?\(", )
+_OPERAND_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+#: wire bytes per device ≈ factor × per-device operand bytes (ring)
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype, 4)
+    if not dims:
+        return b
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return b * n
+
+
+def parse_collectives(hlo_text: str) -> List[Dict[str, Any]]:
+    """Extract collective ops: kind, per-device operand bytes, group size."""
+    out: List[Dict[str, Any]] = []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.search(r"= ?(?:\()?", s)
+        kind = None
+        for k in _WIRE_FACTOR:
+            if f" {k}(" in s or f" {k}-start(" in s:
+                kind = k
+                break
+        if kind is None:
+            continue
+        # operand types appear inside the call parens
+        call = s.split(f" {kind}(", 1)[-1] if f" {kind}(" in s \
+            else s.split(f" {kind}-start(", 1)[-1]
+        operands = _OPERAND_RE.findall(call.split("),")[0])
+        op_bytes = sum(_shape_bytes(dt, dims) for dt, dims in operands)
+        if op_bytes == 0:  # fall back to result type
+            res = _OPERAND_RE.findall(s.split("=")[0] + s.split("=")[1][:80])
+            op_bytes = sum(_shape_bytes(dt, dims) for dt, dims in res[:1])
+        g = _GROUPS_RE.search(s)
+        if g:
+            group = len(g.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(s)
+            group = int(gi.group(2)) if gi else 16
+        out.append({"kind": kind, "operand_bytes": op_bytes, "group": group,
+                    "wire_bytes": _WIRE_FACTOR[kind] * op_bytes})
+    return out
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    ok: bool
+    error: Optional[str] = None
+    compile_s: float = 0.0
+    flops_per_device: float = 0.0
+    bytes_per_device: float = 0.0
+    arg_bytes: int = 0
+    out_bytes: int = 0
+    temp_bytes: int = 0
+    alias_bytes: int = 0
+    peak_bytes_per_device: int = 0
+    collective_wire_bytes: float = 0.0
+    collectives: Optional[Dict[str, Dict[str, float]]] = None
+    model_flops: float = 0.0
+    n_collectives: int = 0
+
+
+def _opt_for(cfg) -> OptConfig:
+    from ..models.model import count_params
+    n = count_params(cfg)
+    # factored optimizer for >=100B params (HBM fit on v5e)
+    return OptConfig(name="adafactor" if n > 100e9 else "adamw")
+
+
+#: §Perf hillclimb variants: cfg transform + sharding-rule overrides
+def _vt_ep_data(cfg):
+    return dataclasses.replace(cfg, ep_axis="data")
+
+
+def _vt_mixed_attn(cfg):
+    return dataclasses.replace(cfg, mixed_attn=True)
+
+
+def _vt_seq_sp(cfg):
+    return dataclasses.replace(cfg, seq_sp=True)
+
+
+VARIANTS: Dict[str, Dict[str, Any]] = {
+    "baseline": {},
+    "ep_data": {"cfg": _vt_ep_data},
+    "mixed_attn": {"cfg": _vt_mixed_attn},
+    "seq_sp": {"cfg": _vt_seq_sp},
+    "seq_sp+mixed": {"cfg": lambda c: _vt_mixed_attn(_vt_seq_sp(c))},
+    "ep_data+mixed": {"cfg": lambda c: _vt_mixed_attn(_vt_ep_data(c))},
+    "ep_data+seq_sp+mixed": {
+        "cfg": lambda c: _vt_mixed_attn(_vt_seq_sp(_vt_ep_data(c)))},
+    "decode_repl": {"rules": {"embed": None}},  # weights-resident serving
+    # decode for archs whose expert/head counts don't divide the mesh:
+    # shard the embed dim over `model` instead (weights still resident
+    # per model shard, no data-axis gathers, tiny per-proj psums)
+    "decode_repl2": {"rules": {"embed": "model"}},
+}
+
+
+def build_cell(arch_id: str, shape_name: str, mesh,
+               variant: str = "baseline") -> Tuple[Any, tuple, dict]:
+    """Returns (step_fn, example_args_abstract, in_shardings_tree)."""
+    cfg = get_config(arch_id)
+    spec = VARIANTS[variant]
+    if "cfg" in spec:
+        cfg = spec["cfg"](cfg)
+    cell = SHAPES[shape_name]
+    m = api(cfg)
+    params_abs = abstract_model_params(cfg)
+    p_axes = model_logical_axes(cfg)
+    params_sh = tree_shardings(mesh, params_abs, p_axes)
+    specs = input_specs(cfg, cell)
+
+    if cell.kind == "train":
+        opt_cfg = _opt_for(cfg)
+        from ..train.optimizer import opt_init
+        opt_abs = jax.eval_shape(lambda p: opt_init(p, opt_cfg), params_abs)
+        o_axes = opt_axes(p_axes, params_abs, opt_cfg)
+        state_abs = {"params": params_abs, "opt": opt_abs,
+                     "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        state_axes = {"params": p_axes, "opt": o_axes, "step": ()}
+        state_sh = tree_shardings(mesh, state_abs, state_axes)
+        batch_abs = specs["batch"]
+        batch_sh = jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(
+                mesh, batch_spec(mesh, s.shape)), batch_abs)
+        # microbatching bounds per-device live activations; the giant MoE
+        # uses lax.scan microbatches + bf16 accumulation (HBM residency) —
+        # the roofline harness re-multiplies scanned-body costs.
+        micro, scan, accum = 1, False, jnp.float32
+        if cfg.arch_id == "kimi-k2-1t-a32b":
+            micro, scan, accum = 8, True, jnp.bfloat16
+        step = make_train_step(cfg, opt_cfg, microbatches=micro,
+                               microbatch_scan=scan, accum_dtype=accum,
+                               q_chunk=None if cell.seq_len <= 4096 else 2048)
+        return step, (state_abs, batch_abs), (state_sh, batch_sh)
+
+    if cell.kind == "prefill":
+        step = make_prefill_step(cfg, q_chunk=max(2048, cell.seq_len // 4))
+        batch_abs = specs["batch"]
+        batch_sh = jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(
+                mesh, batch_spec(mesh, s.shape)), batch_abs)
+        return step, (params_abs, batch_abs), (params_sh, batch_sh)
+
+    # decode
+    step = make_decode_step(cfg)
+    cache_abs = specs["cache"]
+    c_axes = m.cache_axes(cfg)
+    cache_sh = tree_shardings(mesh, cache_abs, c_axes)
+    tok_abs = specs["tokens"]
+    tok_sh = jax.sharding.NamedSharding(mesh, batch_spec(mesh, tok_abs.shape))
+    return step, (params_abs, cache_abs, tok_abs), (params_sh, cache_sh, tok_sh)
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+             save: bool = True, donate: bool = True,
+             keep_text: bool = False, variant: str = "baseline") -> CellResult:
+    from ..parallel.sharding import set_rule_overrides
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = mesh_chips(mesh)
+    cfg = get_config(arch_id)
+    cell = SHAPES[shape_name]
+    res = CellResult(arch=arch_id, shape=shape_name, mesh=mesh_name,
+                     chips=chips, ok=False,
+                     model_flops=model_flops(cfg, cell))
+    set_active_mesh(mesh)
+    set_rule_overrides(VARIANTS[variant].get("rules"))
+    t0 = time.time()
+    try:
+        step, args_abs, shardings = build_cell(arch_id, shape_name, mesh,
+                                               variant=variant)
+        donate_argnums = ()
+        if donate:
+            donate_argnums = (0,) if cell.kind == "train" else (
+                (1,) if cell.kind == "decode" else ())
+        jitted = jax.jit(step, in_shardings=shardings,
+                         donate_argnums=donate_argnums)
+        lowered = jitted.lower(*args_abs)
+        compiled = lowered.compile()
+        res.compile_s = time.time() - t0
+        ma = compiled.memory_analysis()
+        res.arg_bytes = int(ma.argument_size_in_bytes)
+        res.out_bytes = int(ma.output_size_in_bytes)
+        res.temp_bytes = int(ma.temp_size_in_bytes)
+        res.alias_bytes = int(ma.alias_size_in_bytes)
+        res.peak_bytes_per_device = (res.arg_bytes + res.out_bytes
+                                     + res.temp_bytes - res.alias_bytes)
+        ca = compiled.cost_analysis() or {}
+        res.flops_per_device = float(ca.get("flops", 0.0))
+        res.bytes_per_device = float(ca.get("bytes accessed", 0.0))
+        text = compiled.as_text()
+        colls = parse_collectives(text)
+        agg: Dict[str, Dict[str, float]] = defaultdict(
+            lambda: {"count": 0, "operand_bytes": 0.0, "wire_bytes": 0.0})
+        for c in colls:
+            a = agg[c["kind"]]
+            a["count"] += 1
+            a["operand_bytes"] += c["operand_bytes"]
+            a["wire_bytes"] += c["wire_bytes"]
+        res.collectives = dict(agg)
+        res.n_collectives = len(colls)
+        res.collective_wire_bytes = sum(c["wire_bytes"] for c in colls)
+        res.ok = True
+        if keep_text:
+            res_text = text
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        res.error = f"{type(e).__name__}: {e}"[:2000]
+        res.compile_s = time.time() - t0
+    finally:
+        set_active_mesh(None)
+        set_rule_overrides(None)
+
+    if save:
+        os.makedirs(ARTIFACT_DIR, exist_ok=True)
+        suffix = "" if variant == "baseline" else f"__{variant}"
+        path = os.path.join(
+            ARTIFACT_DIR,
+            f"{arch_id}__{shape_name}__{mesh_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(dataclasses.asdict(res), f, indent=1)
+    return res
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    out = []
+    for arch_id, cfg in ARCHS.items():
+        for shape in applicable_shapes(cfg):
+            out.append((arch_id, shape))
+    return out
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--variant", default="baseline", choices=sorted(VARIANTS))
+    args = p.parse_args()
+
+    cells: List[Tuple[str, str]]
+    if args.all:
+        cells = all_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    n_ok = 0
+    for arch_id, shape in cells:
+        for mp in meshes:
+            r = run_cell(arch_id, shape, multi_pod=mp, variant=args.variant)
+            status = "OK " if r.ok else "FAIL"
+            print(f"[{status}] {arch_id:24s} {shape:12s} {r.mesh:10s} "
+                  f"compile={r.compile_s:6.1f}s "
+                  f"peak/dev={r.peak_bytes_per_device/2**30:6.2f}GiB "
+                  f"flops/dev={r.flops_per_device:.3e} "
+                  f"wire={r.collective_wire_bytes/2**20:9.1f}MiB "
+                  f"{('ERR: ' + (r.error or ''))[:140] if not r.ok else ''}",
+                  flush=True)
+            n_ok += int(r.ok)
+    total = len(cells) * len(meshes)
+    print(f"\n{n_ok}/{total} cells compiled")
+    if n_ok < total:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: 10 assigned architectures behind one API (models.model.api)."""
+from . import attention, layers, model, moe, rglru, ssm, transformer, whisper
+from .model import (abstract_model_params, api, concrete_batch,
+                    init_model_params, input_specs, model_flops,
+                    model_logical_axes)

@@ -1,0 +1,142 @@
+"""Model dispatch: one API across all 10 assigned architectures.
+
+    api(cfg)          → namespace with param_defs / loss_fn / prefill /
+                        decode_step / cache_spec / cache_axes / init_cache
+    input_specs(...)  → ShapeDtypeStruct stand-ins for every model input of
+                        a (arch × shape) cell — weak-type-correct,
+                        shardable, no device allocation (dry-run contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from types import SimpleNamespace
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, ShapeCell
+from . import transformer, whisper
+from .layers import abstract_params, init_params, logical_axes
+
+
+def api(cfg: ArchConfig) -> SimpleNamespace:
+    if cfg.family == "encdec":
+        return SimpleNamespace(
+            param_defs=whisper.param_defs,
+            loss_fn=whisper.loss_fn,
+            prefill=whisper.prefill,
+            decode_step=whisper.decode_step,
+            cache_spec=transformer.cache_spec,
+            cache_axes=transformer.cache_axes,
+            init_cache=transformer.init_cache,
+        )
+    return SimpleNamespace(
+        param_defs=transformer.param_defs,
+        loss_fn=transformer.loss_fn,
+        prefill=transformer.prefill,
+        decode_step=transformer.decode_step,
+        cache_spec=transformer.cache_spec,
+        cache_axes=transformer.cache_axes,
+        init_cache=transformer.init_cache,
+    )
+
+
+def abstract_model_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    defs = api(cfg).param_defs(cfg)
+    return abstract_params(defs, dtype=dtype)
+
+
+def model_logical_axes(cfg: ArchConfig):
+    defs = api(cfg).param_defs(cfg)
+    return logical_axes(defs)
+
+
+def init_model_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.bfloat16):
+    defs = api(cfg).param_defs(cfg)
+    params = init_params(defs, key, dtype=dtype)
+    if cfg.tie_embeddings:
+        # tied embeddings are a true shared reference — the cross-pod case
+        # Chipmink's virtual memo space preserves
+        pass  # logits_from reads params["embed"] directly (no copy)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# input specs per shape cell
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of (arch × shape)."""
+    B, S = cell.global_batch, cell.seq_len
+    tok = lambda s: jax.ShapeDtypeStruct((B, s), jnp.int32)
+    if cell.kind == "train":
+        batch: Dict[str, Any] = {"tokens": tok(S), "labels": tok(S)}
+        _add_frontend(batch, cfg, B, S)
+        return {"batch": batch}
+    if cell.kind == "prefill":
+        batch = {"tokens": tok(S)}
+        _add_frontend(batch, cfg, B, S)
+        return {"batch": batch}
+    if cell.kind == "decode":
+        cache = api(cfg).cache_spec(cfg, B, S)
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "cache": cache}
+    raise ValueError(cell.kind)
+
+
+def _add_frontend(batch: Dict, cfg: ArchConfig, B: int, S: int) -> None:
+    if cfg.vlm is not None:
+        P = min(cfg.vlm.n_patches, S)
+        batch["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, P, cfg.d_model), jnp.bfloat16)
+    if cfg.encoder is not None:
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16)
+
+
+def concrete_batch(cfg: ArchConfig, cell: ShapeCell, seed: int = 0) -> Dict:
+    """Real (host) arrays matching input_specs — smoke tests / examples."""
+    rng = np.random.default_rng(seed)
+    B, S = cell.global_batch, cell.seq_len
+    specs = input_specs(cfg, cell)
+
+    def materialize(s: jax.ShapeDtypeStruct):
+        if np.issubdtype(np.dtype(s.dtype), np.integer):
+            return jnp.asarray(rng.integers(0, cfg.vocab, size=s.shape),
+                               jnp.int32)
+        return jnp.asarray(rng.standard_normal(s.shape), s.dtype)
+
+    return jax.tree.map(materialize, specs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# ---------------------------------------------------------------------------
+# analytic FLOPs (roofline: MODEL_FLOPS = 6·N·D dense / 6·N_active·D MoE)
+# ---------------------------------------------------------------------------
+
+
+def count_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    defs = api(cfg).param_defs(cfg)
+    total = 0
+    for path, d in defs.items():
+        n = int(np.prod(d.shape))
+        if active_only and cfg.moe is not None and "ffn" in path \
+                and path[-1] in ("w_gate", "w_up", "w_down") \
+                and len(d.shape) == 3:
+            # expert tensors: only top_k (+shared) of n_experts active
+            n = n * cfg.moe.top_k // cfg.moe.n_experts
+        total += n
+    return total
+
+
+def model_flops(cfg: ArchConfig, cell: ShapeCell) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) for train; 2·N·D per generated
+    token for inference cells."""
+    n_params = count_params(cfg, active_only=cfg.moe is not None)
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    mult = 6.0 if cell.kind == "train" else 2.0
+    return mult * n_params * tokens

@@ -1,0 +1,244 @@
+"""Whisper-style encoder-decoder backbone [arXiv:2212.04356].
+
+The conv audio frontend is a STUB per the assignment: `input_specs()`
+supplies precomputed frame embeddings (B, n_frames, d_model).  Sinusoidal
+positions are used on both sides (any-length-safe for the stress decode
+shapes; noted deviation from whisper's learned decoder positions).
+
+Decoder layers: causal self-attention (+ ring-buffered KV cache in decode)
+→ cross-attention over encoder output (cross-KV computed once, carried in
+the cache) → GELU MLP.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..parallel.sharding import constrain
+from .attention import attention, decode_attention
+from .layers import ParamDef, ParamDefs, dense, gelu_mlp, layer_norm
+
+
+def _ln_defs(p, E) -> ParamDefs:
+    return {p + ("scale",): ParamDef((E,), jnp.float32, (None,), "ones"),
+            p + ("bias",): ParamDef((E,), jnp.float32, (None,), "zeros")}
+
+
+def _attn_defs(p, cfg: ArchConfig) -> ParamDefs:
+    E, Hq, Hkv, D = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {
+        p + ("wq",): ParamDef((E, Hq * D), None, ("embed", "heads")),
+        p + ("bq",): ParamDef((Hq * D,), None, ("heads",), "zeros"),
+        p + ("wk",): ParamDef((E, Hkv * D), None, ("embed", "kv")),
+        p + ("wv",): ParamDef((E, Hkv * D), None, ("embed", "kv")),
+        p + ("bv",): ParamDef((Hkv * D,), None, ("kv",), "zeros"),
+        p + ("wo",): ParamDef((Hq * D, E), None, ("heads", "embed")),
+        p + ("bo",): ParamDef((E,), None, (None,), "zeros"),
+    }
+
+
+def _mlp_defs(p, cfg: ArchConfig) -> ParamDefs:
+    E, F = cfg.d_model, cfg.d_ff
+    return {
+        p + ("w_up",): ParamDef((E, F), None, ("embed", "ffn")),
+        p + ("b_up",): ParamDef((F,), None, ("ffn",), "zeros"),
+        p + ("w_down",): ParamDef((F, E), None, ("ffn", "embed")),
+        p + ("b_down",): ParamDef((E,), None, (None,), "zeros"),
+    }
+
+
+def param_defs(cfg: ArchConfig) -> ParamDefs:
+    E, V = cfg.d_model, cfg.vocab
+    enc = cfg.encoder
+    defs: ParamDefs = {
+        ("embed",): ParamDef((V, E), None, ("vocab", "embed"), "embed"),
+        ("frame_proj",): ParamDef((E, E), None, ("embed", None)),
+    }
+    defs.update(_ln_defs(("enc_final_norm",), E))
+    defs.update(_ln_defs(("final_norm",), E))
+    for i in range(enc.n_layers):
+        p = ("encoder", str(i))
+        defs.update(_ln_defs(p + ("norm1",), E))
+        defs.update(_attn_defs(p + ("attn",), cfg))
+        defs.update(_ln_defs(p + ("norm2",), E))
+        defs.update(_mlp_defs(p + ("ffn",), cfg))
+    for i in range(cfg.n_layers):
+        p = ("layers", str(i))
+        defs.update(_ln_defs(p + ("norm1",), E))
+        defs.update(_attn_defs(p + ("attn",), cfg))
+        defs.update(_ln_defs(p + ("normx",), E))
+        defs.update(_attn_defs(p + ("xattn",), cfg))
+        defs.update(_ln_defs(p + ("norm2",), E))
+        defs.update(_mlp_defs(p + ("ffn",), cfg))
+    return defs
+
+
+def sinusoids(length: int, channels: int) -> jax.Array:
+    lt = math.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-lt * jnp.arange(channels // 2, dtype=jnp.float32))
+    ang = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+def _ln(x, p):
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def _mha(p: Dict, xq: jax.Array, xkv: jax.Array, cfg: ArchConfig, *,
+         causal: bool, q_chunk: Optional[int] = None) -> jax.Array:
+    B, S, _ = xq.shape
+    T = xkv.shape[1]
+    Hq, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = dense(xq, p["wq"], p["bq"]).reshape(B, S, Hq, D)
+    k = dense(xkv, p["wk"]).reshape(B, T, Hkv, D)
+    v = dense(xkv, p["wv"], p["bv"]).reshape(B, T, Hkv, D)
+    q = constrain(q, ("batch", "seq_model", None, None))
+    o = attention(q, k, v, causal=causal, q_chunk=q_chunk)
+    return dense(o.reshape(B, S, Hq * D), p["wo"], p["bo"])
+
+
+def encode(params: Dict, frames: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """frames: (B, F, E) stub embeddings → encoder output (B, F, E)."""
+    B, F, E = frames.shape
+    x = dense(frames.astype(jnp.bfloat16), params["frame_proj"])
+    x = x + sinusoids(F, E)[None].astype(x.dtype)
+    x = constrain(x, ("batch", None, None))
+    for i in range(cfg.encoder.n_layers):
+        p = params["encoder"][str(i)]
+        x = x + _mha(p["attn"], _ln(x, p["norm1"]), _ln(x, p["norm1"]), cfg,
+                     causal=False)
+        x = x + gelu_mlp(_ln(x, p["norm2"]), p["ffn"]["w_up"],
+                         p["ffn"]["b_up"], p["ffn"]["w_down"],
+                         p["ffn"]["b_down"])
+    return _ln(x, params["enc_final_norm"])
+
+
+def decode_train(params: Dict, tokens: jax.Array, enc_out: jax.Array,
+                 cfg: ArchConfig, *, q_chunk: Optional[int] = None,
+                 remat: bool = True) -> jax.Array:
+    B, S = tokens.shape
+    E = cfg.d_model
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    x = x + sinusoids(S, E)[None].astype(x.dtype)
+    x = constrain(x, ("batch", None, None))
+
+    def layer(p, y):
+        y = y + _mha(p["attn"], _ln(y, p["norm1"]), _ln(y, p["norm1"]), cfg,
+                     causal=True, q_chunk=q_chunk)
+        y = y + _mha(p["xattn"], _ln(y, p["normx"]), enc_out, cfg,
+                     causal=False, q_chunk=q_chunk)
+        y = y + gelu_mlp(_ln(y, p["norm2"]), p["ffn"]["w_up"],
+                         p["ffn"]["b_up"], p["ffn"]["w_down"],
+                         p["ffn"]["b_down"])
+        return constrain(y, ("batch", None, None))
+
+    for i in range(cfg.n_layers):
+        fn = jax.checkpoint(layer) if remat else layer
+        x = fn(params["layers"][str(i)], x)
+    return _ln(x, params["final_norm"])
+
+
+def loss_fn(params: Dict, batch: Dict, cfg: ArchConfig, *,
+            q_chunk: Optional[int] = None, remat: bool = True):
+    enc_out = encode(params, batch["frames"], cfg)
+    x = decode_train(params, batch["tokens"], enc_out, cfg, q_chunk=q_chunk,
+                     remat=remat)
+    logits = jnp.einsum("bse,ev->bsv", x, params["embed"].T)
+    from .transformer import sharded_cross_entropy
+    logits = constrain(logits, ("batch", None, "vocab"))
+    loss = sharded_cross_entropy(logits, batch["labels"])
+    return loss, {"nll": loss}
+
+
+def prefill(params: Dict, batch: Dict, cfg: ArchConfig, *,
+            q_chunk: Optional[int] = None):
+    enc_out = encode(params, batch["frames"], cfg)
+    x = decode_train(params, batch["tokens"], enc_out, cfg, q_chunk=q_chunk,
+                     remat=False)
+    logits = jnp.einsum("be,ev->bv", x[:, -1], params["embed"].T)
+    return logits, {}
+
+
+# -- decode ------------------------------------------------------------------
+
+
+def encoder_cache_spec(cfg: ArchConfig, B: int) -> Dict:
+    """Cross-attention K/V per decoder layer, precomputed from enc output."""
+    Hkv, D = cfg.n_kv_heads, cfg.hd
+    F = cfg.encoder.n_frames
+    return {str(i): {
+        "xk": jax.ShapeDtypeStruct((B, F, Hkv, D), jnp.bfloat16),
+        "xv": jax.ShapeDtypeStruct((B, F, Hkv, D), jnp.bfloat16),
+    } for i in range(cfg.n_layers)}
+
+
+def encoder_cache_axes(cfg: ArchConfig) -> Dict:
+    return {str(i): {"xk": ("batch", None, None, None),
+                     "xv": ("batch", None, None, None)}
+            for i in range(cfg.n_layers)}
+
+
+def build_cross_cache(params: Dict, enc_out: jax.Array, cfg: ArchConfig) -> Dict:
+    B, F, _ = enc_out.shape
+    Hkv, D = cfg.n_kv_heads, cfg.hd
+    out = {}
+    for i in range(cfg.n_layers):
+        p = params["layers"][str(i)]["xattn"]
+        out[str(i)] = {
+            "xk": dense(enc_out, p["wk"]).reshape(B, F, Hkv, D),
+            "xv": dense(enc_out, p["wv"], p["bv"]).reshape(B, F, Hkv, D),
+        }
+    return out
+
+
+def decode_step(params: Dict, cache: Dict, tokens: jax.Array,
+                cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    """One decoder token over self-KV (ring) + fixed cross-KV."""
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    E = cfg.d_model
+    Hq, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    # sinusoidal position at `pos`
+    lt = math.log(10000.0) / (E // 2 - 1)
+    inv = jnp.exp(-lt * jnp.arange(E // 2, dtype=jnp.float32))
+    ang = pos.astype(jnp.float32) * inv
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None]
+    x = x + pe.astype(x.dtype)
+    new_layers: Dict[str, Dict] = {}
+    for i in range(cfg.n_layers):
+        p = params["layers"][str(i)]
+        lc = cache["layers"][str(i)]
+        h = _ln(x, p["norm1"])
+        q = dense(h, p["attn"]["wq"], p["attn"]["bq"]).reshape(B, 1, Hq, D)
+        k = dense(h, p["attn"]["wk"]).reshape(B, 1, Hkv, D)
+        v = dense(h, p["attn"]["wv"], p["attn"]["bv"]).reshape(B, 1, Hkv, D)
+        T = lc["k"].shape[1]
+        slot = jnp.mod(pos, T)
+        kc = jax.lax.dynamic_update_slice_in_dim(lc["k"], k.astype(lc["k"].dtype), slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(lc["v"], v.astype(lc["v"].dtype), slot, axis=1)
+        kc = constrain(kc, ("batch", "cache_t", None, None))
+        vc = constrain(vc, ("batch", "cache_t", None, None))
+        lengths = jnp.minimum(pos + 1, T) * jnp.ones((B,), jnp.int32)
+        o = decode_attention(q, kc, vc, lengths)
+        x = x + dense(o.reshape(B, 1, Hq * D), p["attn"]["wo"], p["attn"]["bo"])
+        # cross attention over fixed encoder KV
+        h = _ln(x, p["normx"])
+        qx = dense(h, p["xattn"]["wq"], p["xattn"]["bq"]).reshape(B, 1, Hq, D)
+        xc = cache["cross"][str(i)]
+        F = xc["xk"].shape[1]
+        lengths_x = jnp.full((B,), F, jnp.int32)
+        ox = decode_attention(qx, xc["xk"], xc["xv"], lengths_x)
+        x = x + dense(ox.reshape(B, 1, Hq * D), p["xattn"]["wo"], p["xattn"]["bo"])
+        h = _ln(x, p["norm2"])
+        x = x + gelu_mlp(h, p["ffn"]["w_up"], p["ffn"]["b_up"],
+                         p["ffn"]["w_down"], p["ffn"]["b_down"])
+        new_layers[str(i)] = {"k": kc, "v": vc}
+    x = _ln(x, params["final_norm"])
+    logits = jnp.einsum("be,ev->bv", x[:, 0], params["embed"].T)
+    return logits, {"layers": new_layers, "pos": pos + 1,
+                    "cross": cache["cross"]}

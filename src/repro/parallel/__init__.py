@@ -1,0 +1,3 @@
+"""Distribution: logical-axis sharding rules for DP/FSDP/TP/EP/SP."""
+from .sharding import (LOGICAL_RULES, batch_spec, constrain, named_sharding,
+                       set_active_mesh, spec_for, tree_shardings)

@@ -1,0 +1,138 @@
+"""Sharding rules: logical axes → mesh axes (DP / FSDP / TP / EP / SP).
+
+Mesh: ``(pod, data, model)`` multi-pod or ``(data, model)`` single-pod.
+  * ``pod``+``data`` — batch/data parallel domain; FSDP (zero-style) weight
+    sharding lives on ``data``; the pod axis carries only gradient
+    reduction (cross-pod DCI traffic is gradients, never activations).
+  * ``model`` — tensor parallel (fused head / ffn dims), expert parallel
+    (experts), and *sequence parallel* for attention scores (queries'
+    S-dim shards over ``model``, which stays divisible for every assigned
+    arch — head counts often are not, e.g. qwen2.5's 40 heads on 16-way TP).
+
+`constrain` is divisibility-aware: an axis is applied only when it divides
+the dimension, so reduced smoke configs and B=1 long-context cells lower
+without special-casing.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis name -> mesh axes (None = replicate)
+LOGICAL_RULES: Dict[str, Any] = {
+    "vocab": "model",
+    "heads": "model",
+    "kv": "model",
+    "ffn": "model",
+    "experts": "model",
+    "experts_dp": "data",   # EP-over-data profile (§Perf hillclimb)
+    "inner": "model",       # mamba d_inner
+    "lru_heads": "model",   # rg-lru block-diagonal gate blocks
+    "embed": "data",        # FSDP/zero dimension
+    "batch": ("pod", "data"),
+    "seq_model": "model",   # sequence-parallel attention
+    "cache_t": "model",     # decode: KV-cache time dim over model
+}
+
+_ACTIVE_MESH: Optional[Mesh] = None
+_RULE_OVERRIDES: Dict[str, Any] = {}
+
+
+def set_active_mesh(mesh: Optional[Mesh]) -> None:
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+def get_active_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+def set_rule_overrides(overrides: Optional[Dict[str, Any]]) -> None:
+    """Per-run logical-rule overrides, e.g. {"embed": None} to keep
+    weights resident (replicated over data) for decode serving."""
+    global _RULE_OVERRIDES
+    _RULE_OVERRIDES = dict(overrides or {})
+
+
+def _mesh_axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([_mesh_axis_size(mesh, a) for a in axis]))
+    return int(mesh.shape[axis]) if axis in mesh.shape else 1
+
+
+def _resolve_axis(mesh: Mesh, logical: Optional[str], dim: int):
+    """Mesh axes for one logical dim, dropped unless it divides `dim`."""
+    if logical is None:
+        return None
+    if logical in _RULE_OVERRIDES:
+        rule = _RULE_OVERRIDES[logical]
+    else:
+        rule = LOGICAL_RULES.get(logical)
+    if rule is None:
+        return None
+    if isinstance(rule, (tuple, list)):
+        # use the longest prefix of axes whose product divides dim
+        chosen = []
+        size = 1
+        for a in rule:
+            a_sz = _mesh_axis_size(mesh, a)
+            if a_sz > 1 and dim % (size * a_sz) == 0:
+                chosen.append(a)
+                size *= a_sz
+        return tuple(chosen) if chosen else None
+    if _mesh_axis_size(mesh, rule) <= 1:
+        return None
+    return rule if dim % _mesh_axis_size(mesh, rule) == 0 else None
+
+
+def spec_for(mesh: Mesh, logical_axes: Sequence[Optional[str]],
+             shape: Sequence[int]) -> P:
+    axes = [_resolve_axis(mesh, la, d) for la, d in zip(logical_axes, shape)]
+    # an axis may appear at most once in a PartitionSpec
+    seen = set()
+    out = []
+    for a in axes:
+        names = a if isinstance(a, tuple) else ((a,) if a else ())
+        if any(n in seen for n in names):
+            out.append(None)
+        else:
+            seen.update(names)
+            out.append(a)
+    return P(*out)
+
+
+def named_sharding(mesh: Mesh, logical_axes: Sequence[Optional[str]],
+                   shape: Sequence[int]) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(mesh, logical_axes, shape))
+
+
+def tree_shardings(mesh: Mesh, abstract_tree: Any, axes_tree: Any) -> Any:
+    """Map (ShapeDtypeStruct tree, logical-axes tree) → NamedSharding tree."""
+    return jax.tree.map(
+        lambda sds, axes: named_sharding(mesh, axes, sds.shape),
+        abstract_tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op without a mesh."""
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return x
+    spec = spec_for(mesh, logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_spec(mesh: Mesh, shape: Sequence[int],
+               batch_logical: str = "batch") -> P:
+    """Spec for a (batch, ...) input tensor."""
+    axes = [batch_logical] + [None] * (len(shape) - 1)
+    return spec_for(mesh, axes, shape)

@@ -1,0 +1,3 @@
+"""Runtime: fault tolerance, straggler mitigation, elastic re-meshing."""
+from .fault_tolerance import (StragglerMonitor, TrainingSupervisor,
+                              elastic_restore)

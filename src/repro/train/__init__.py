@@ -1,0 +1,3 @@
+"""Training substrate: optimizers, step factories, data pipeline,
+gradient compression."""
+from . import data, grad_compress, optimizer, serve_step, train_step

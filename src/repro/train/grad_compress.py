@@ -1,0 +1,78 @@
+"""Gradient compression: int8 block-quantized reduction with error feedback.
+
+At 1000+-node scale the cross-pod (DCI) gradient all-reduce is the
+dominant wide-area collective; int8 quantization cuts it 4× (bf16→int8 +
+one fp32 scale per block).  Error feedback (residual carried in the train
+state) keeps convergence unbiased in expectation.
+
+Two integration modes:
+  * `quantize_dequantize(g, ef)` — pure per-shard transform applied before
+    the (XLA-inserted) reduction under pjit; models a compressed collective
+    while keeping GSPMD in charge of scheduling.
+  * `compressed_psum(g, axis)` — explicit shard_map collective (int32
+    accumulate) for meshes where we own the reduction.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _blockify(x: jax.Array) -> Tuple[jax.Array, int, int]:
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, BLOCK), n, pad
+
+
+def quantize(x: jax.Array):
+    blocks, n, _pad = _blockify(x)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32), n
+
+
+def dequantize(q: jax.Array, scale: jax.Array, n: int,
+               shape, dtype) -> jax.Array:
+    x = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+    return x.reshape(shape).astype(dtype)
+
+
+def quantize_dequantize(g: jax.Array, ef: Optional[jax.Array] = None):
+    """Returns (g_hat, new_error_feedback)."""
+    x = g.astype(jnp.float32)
+    if ef is not None:
+        x = x + ef.astype(jnp.float32)
+    q, scale, n = quantize(x)
+    x_hat = dequantize(q, scale, n, g.shape, jnp.float32)
+    new_ef = (x - x_hat).astype(jnp.bfloat16)
+    return x_hat.astype(g.dtype), new_ef
+
+
+def tree_quantize_dequantize(grads: Any, ef_tree: Optional[Any]):
+    if ef_tree is None:
+        ef_tree = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.bfloat16),
+                               grads)
+    pairs = jax.tree.map(quantize_dequantize, grads, ef_tree)
+    g_hat = jax.tree.map(lambda t: t[0], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], pairs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return g_hat, new_ef
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """Explicit int8-quantized psum inside shard_map: int32 accumulation of
+    int8 payloads + fp32 scale reduction (the wire format is 8.125
+    bits/element vs 16 for bf16)."""
+    q, scale, n = quantize(x)
+    acc = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    s = jax.lax.pmax(scale, axis_name)  # conservative shared scale
+    out = (acc.astype(jnp.float32) * s).reshape(-1)[:n]
+    return out.reshape(x.shape).astype(x.dtype)

@@ -1,0 +1,163 @@
+"""Optimizers: AdamW and factored Adafactor (pure pytree functions).
+
+Adafactor (factored second moment, no momentum) is what makes the 1T-param
+MoE feasible on v5e HBM: optimizer state shrinks from 2 fp32 trees to
+row/col factors.  Optimizer-state leaves inherit the parameter's logical
+sharding axes (FSDP/zero over `data`), declared by `opt_axes`.
+
+TrainState = {"params": tree, "opt": tree, "step": scalar}.  Frozen
+parameters (fine-tuning) are expressed by a `frozen` path-prefix list in
+the factory: their updates are zeroed *and* their paths feed Chipmink's
+active-variable filter (provably clean pods).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"       # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    eps_factored: float = 1e-30
+    clip_norm: float = 1.0
+
+
+def _tree_map_paths(fn: Callable, tree: Any, prefix=()) -> Any:
+    if isinstance(tree, dict):
+        return {k: _tree_map_paths(fn, v, prefix + (k,)) for k, v in tree.items()}
+    return fn(prefix, tree)
+
+
+def is_frozen(path: Tuple[str, ...], frozen: Sequence[str]) -> bool:
+    p = "/".join(path)
+    return any(p == f or p.startswith(f + "/") for f in frozen)
+
+
+# -- AdamW -------------------------------------------------------------------
+
+def adamw_init(params: Any) -> Dict:
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return {"mu": zeros(params), "nu": zeros(params)}
+
+
+def adamw_update(grads, opt, params, step, cfg: OptConfig):
+    count = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.b1 ** count
+    bc2 = 1.0 - cfg.b2 ** count
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * u).astype(p.dtype), m, v
+
+    flat = jax.tree.map(upd, grads, opt["mu"], opt["nu"], params)
+    new_p = jax.tree.map(lambda t: t[0], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"mu": new_m, "nu": new_v}
+
+
+# -- Adafactor ---------------------------------------------------------------
+
+def _factored(shape: Tuple[int, ...]) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params: Any) -> Dict:
+    def slot(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"v": jax.tree.map(slot, params,
+                              is_leaf=lambda x: hasattr(x, "shape"))}
+
+
+def adafactor_update(grads, opt, params, step, cfg: OptConfig):
+    count = step.astype(jnp.float32) + 1.0
+    decay = 1.0 - count ** -0.8
+
+    def upd(g, s, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + cfg.eps_factored
+        if _factored(p.shape):
+            vr = decay * s["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * s["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            rf = vr / jnp.mean(vr, axis=-1, keepdims=True)
+            u = g / (jnp.sqrt(rf)[..., None] * jnp.sqrt(vc)[..., None, :]
+                     + cfg.eps)
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            v = decay * s["v"] + (1 - decay) * g2
+            u = g / (jnp.sqrt(v) + cfg.eps)
+            new_s = {"v": v}
+        # update clipping (RMS<=1) as in the paper's Adafactor
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * u).astype(p.dtype), new_s
+
+    paired = jax.tree.map(upd, grads, opt["v"], params,
+                          is_leaf=lambda x: hasattr(x, "shape") or (
+                              isinstance(x, dict) and ("vr" in x or "v" in x)))
+    new_p = jax.tree.map(lambda t: t[0], paired,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_s = jax.tree.map(lambda t: t[1], paired,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"v": new_s}
+
+
+# -- shared -----------------------------------------------------------------
+
+def opt_init(params: Any, cfg: OptConfig) -> Dict:
+    return adamw_init(params) if cfg.name == "adamw" else adafactor_init(params)
+
+
+def opt_update(grads, opt, params, step, cfg: OptConfig):
+    if cfg.name == "adamw":
+        return adamw_update(grads, opt, params, step, cfg)
+    return adafactor_update(grads, opt, params, step, cfg)
+
+
+def opt_axes(param_axes: Any, params_abstract: Any, cfg: OptConfig) -> Any:
+    """Logical-axes tree for the optimizer state (mirrors params)."""
+    if cfg.name == "adamw":
+        return {"mu": param_axes, "nu": param_axes}
+
+    def slot_axes(axes, p):
+        if _factored(p.shape):
+            return {"vr": tuple(axes[:-1]), "vc": tuple(axes[:-2]) + (axes[-1],)}
+        return {"v": tuple(axes)}
+
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x)
+    return {"v": jax.tree.map(slot_axes, param_axes, params_abstract,
+                              is_leaf=is_axes)}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm

@@ -1,0 +1,57 @@
+"""Serve-step factories: prefill and decode as pjit-able functions.
+
+`make_prefill_step` lowers the full-prompt forward (the prefill_32k cell);
+`make_decode_step` lowers one-token generation over the KV/state cache
+(decode_32k / long_500k cells).  Cache sharding: time dim over `model`
+(split-KV / FlashDecoding-style — softmax reductions become small
+collectives), batch over (pod, data).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models.model import api
+
+
+def make_prefill_step(cfg: ArchConfig, *, q_chunk: Optional[int] = 2048
+                      ) -> Callable:
+    m = api(cfg)
+
+    def prefill_step(params: Dict, batch: Dict) -> jax.Array:
+        logits, _ = m.prefill(params, batch, cfg, q_chunk=q_chunk)
+        return logits
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig) -> Callable:
+    m = api(cfg)
+
+    def decode_step(params: Dict, cache: Dict, tokens: jax.Array
+                    ) -> Tuple[jax.Array, Dict]:
+        return m.decode_step(params, cache, tokens, cfg)
+
+    return decode_step
+
+
+def greedy_generate(cfg: ArchConfig, params: Dict, prompt: jax.Array,
+                    n_steps: int, cache_len: int = 256) -> jax.Array:
+    """Small-model generation loop (examples/tests): feeds the prompt
+    token-by-token through decode_step (also a prefill/decode parity
+    check), then greedy-decodes `n_steps` tokens."""
+    m = api(cfg)
+    B, P = prompt.shape
+    cache = m.init_cache(cfg, B, cache_len)
+    step = jax.jit(lambda p, c, t: m.decode_step(p, c, t, cfg))
+    logits = None
+    for i in range(P):
+        logits, cache = step(params, cache, prompt[:, i:i + 1])
+    out = [jnp.argmax(logits, axis=-1)[:, None]]
+    for _ in range(n_steps - 1):
+        logits, cache = step(params, cache, out[-1])
+        out.append(jnp.argmax(logits, axis=-1)[:, None])
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# make proptest (the hypothesis stand-in) importable under
+# `PYTHONPATH=src pytest tests/`
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,84 @@
+"""Minimal property-testing shim (hypothesis is unavailable offline).
+
+Provides `@given(...)` running the test body over `N_CASES` seeded random
+cases with shrink-free failure reporting.  Strategies are callables
+(rng) -> value; combinators mirror the hypothesis API we need.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Any, Callable, Dict
+
+import numpy as np
+
+N_CASES = int(os.environ.get("PROPTEST_CASES", "25"))
+
+
+class Strategy:
+    def __init__(self, fn: Callable[[np.random.Generator], Any], desc: str):
+        self.fn = fn
+        self.desc = desc
+
+    def __call__(self, rng: np.random.Generator) -> Any:
+        return self.fn(rng)
+
+
+def integers(lo: int, hi: int) -> Strategy:
+    return Strategy(lambda r: int(r.integers(lo, hi + 1)), f"int[{lo},{hi}]")
+
+
+def floats(lo: float, hi: float) -> Strategy:
+    return Strategy(lambda r: float(r.uniform(lo, hi)), f"float[{lo},{hi}]")
+
+
+def sampled_from(items) -> Strategy:
+    items = list(items)
+    return Strategy(lambda r: items[int(r.integers(0, len(items)))],
+                    f"sampled{items!r:.40s}")
+
+
+def lists(elem: Strategy, min_size: int = 0, max_size: int = 8) -> Strategy:
+    def gen(r):
+        n = int(r.integers(min_size, max_size + 1))
+        return [elem(r) for _ in range(n)]
+    return Strategy(gen, f"list<{elem.desc}>")
+
+
+def arrays(dtype, shape_strategy: Strategy) -> Strategy:
+    def gen(r):
+        shape = shape_strategy(r)
+        if np.issubdtype(np.dtype(dtype), np.integer):
+            return r.integers(-100, 100, size=shape).astype(dtype)
+        if np.dtype(dtype) == np.bool_:
+            return r.random(shape) > 0.5
+        return r.standard_normal(shape).astype(dtype)
+    return Strategy(gen, f"array<{np.dtype(dtype)}>")
+
+
+def shapes(max_dims: int = 3, max_side: int = 64) -> Strategy:
+    def gen(r):
+        nd = int(r.integers(0, max_dims + 1))
+        return tuple(int(r.integers(1, max_side + 1)) for _ in range(nd))
+    return Strategy(gen, "shape")
+
+
+def given(**strategies: Strategy):
+    def deco(fn):
+        # note: deliberately NOT functools.wraps — pytest would read the
+        # wrapped signature and treat drawn parameters as fixtures
+        def wrapper(*args, **kw):
+            for case in range(N_CASES):
+                rng = np.random.default_rng((hash(fn.__name__) & 0xFFFF, case))
+                drawn = {k: s(rng) for k, s in strategies.items()}
+                try:
+                    fn(*args, **drawn, **kw)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property failed on case {case} with "
+                        f"{ {k: repr(v)[:80] for k, v in drawn.items()} }"
+                    ) from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -1,0 +1,183 @@
+"""Chipmink end-to-end: round-trip equivalence (Thm 7.1), synonym dedup
+(§4.2), partial loading (§3.1), time travel / branching, thesaurus
+capacity, async saving (§6), CD/AVF ablations (§8.8)."""
+import numpy as np
+import pytest
+
+from repro.core import (BundleAll, Chipmink, FileStore, LGA, MemoryStore,
+                        SplitAll)
+
+from proptest import given, integers, sampled_from
+
+
+def _mk_state(rng, rows=2048):
+    return {
+        "params": {"emb": rng.standard_normal((rows, 16)).astype(np.float32),
+                   "w": rng.standard_normal((64, 64)).astype(np.float32),
+                   "scale": rng.standard_normal(64).astype(np.float32)},
+        "opt": {"mu": np.zeros((rows, 16), np.float32)},
+        "step": 0,
+    }
+
+
+def test_roundtrip_equivalence_thm71():
+    rng = np.random.default_rng(0)
+    state = _mk_state(rng)
+    state["params"]["tied"] = state["params"]["emb"]
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12)
+    t = ck.save(state)
+    loaded = ck.load(time_id=t)
+    for k in ("emb", "w", "scale"):
+        assert np.array_equal(loaded["params"][k], state["params"][k])
+        assert loaded["params"][k].dtype == state["params"][k].dtype
+    assert loaded["step"] == 0
+    # shared reference restored as a true alias (virtual memo space)
+    assert loaded["params"]["tied"] is loaded["params"]["emb"]
+
+
+def test_incremental_save_is_small():
+    rng = np.random.default_rng(1)
+    state = _mk_state(rng)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12)
+    ck.save(state)
+    full = ck.save_stats[-1]["bytes_written"]
+    state["params"]["emb"][5, :] += 1.0
+    state["step"] = 1
+    ck.save(state)
+    delta = ck.save_stats[-1]["bytes_written"]
+    assert delta < full * 0.15, (delta, full)
+
+
+def test_unchanged_resave_writes_almost_nothing():
+    rng = np.random.default_rng(2)
+    state = _mk_state(rng)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12)
+    ck.save(state)
+    ck.save(state)
+    s = ck.save_stats[-1]
+    assert s["pods_written"] == 0, s
+
+
+def test_partial_load_reads_fewer_pods():
+    rng = np.random.default_rng(3)
+    state = _mk_state(rng)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12)
+    t = ck.save(state)
+    ck.load(time_id=t)
+    full_pods = ck.last_load_pods
+    out = ck.load(names={"step"}, time_id=t)
+    assert out == {"step": 0}
+    assert ck.last_load_pods < full_pods
+
+
+def test_time_travel_bit_exact():
+    rng = np.random.default_rng(4)
+    state = _mk_state(rng)
+    orig = state["params"]["emb"].copy()
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12)
+    t1 = ck.save(state)
+    state["params"]["emb"][:] += 1.0
+    t2 = ck.save(state)
+    old = ck.load(names={"params"}, time_id=t1)
+    assert np.array_equal(old["params"]["emb"], orig)
+    new = ck.load(names={"params"}, time_id=t2)
+    assert np.array_equal(new["params"]["emb"], state["params"]["emb"])
+
+
+def test_branching_dedup():
+    """Two branches sharing a base dedup against each other through the
+    content-addressed store (the paper's exploration story)."""
+    rng = np.random.default_rng(5)
+    state = _mk_state(rng)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12)
+    t_base = ck.save(state)
+    base_bytes = ck.store.total_bytes()
+    # branch A: mutate one row
+    a = {k: (v.copy() if hasattr(v, "copy") else v)
+         for k, v in state["params"].items()}
+    a["emb"][0] += 1
+    ck.save({"params": a, "opt": state["opt"], "step": 1}, parent=t_base)
+    # branch B from base: mutate another row
+    b = {k: (v.copy() if hasattr(v, "copy") else v)
+         for k, v in state["params"].items()}
+    b["emb"][100] += 1
+    ck.save({"params": b, "opt": state["opt"], "step": 1}, parent=t_base)
+    assert ck.store.total_bytes() < base_bytes * 1.5
+
+
+def test_file_store_roundtrip(tmp_path):
+    rng = np.random.default_rng(6)
+    state = _mk_state(rng)
+    ck = Chipmink(FileStore(str(tmp_path)), chunk_bytes=1 << 12)
+    t = ck.save(state)
+    ck2 = Chipmink(FileStore(str(tmp_path)), chunk_bytes=1 << 12)
+    loaded = ck2.load(time_id=t)
+    assert np.array_equal(loaded["params"]["emb"], state["params"]["emb"])
+    assert ck.store.head() == t  # type: ignore[attr-defined]
+
+
+def test_compressed_store():
+    rng = np.random.default_rng(7)
+    state = {"z": np.zeros((4096, 16), np.float32),
+             "r": rng.standard_normal((4096, 16)).astype(np.float32)}
+    plain = Chipmink(MemoryStore(compress=False), chunk_bytes=1 << 14)
+    comp = Chipmink(MemoryStore(compress=True), chunk_bytes=1 << 14)
+    plain.save(state)
+    comp.save(state)
+    assert comp.store.total_bytes() < plain.store.total_bytes()
+    loaded = comp.load()
+    assert np.array_equal(loaded["z"], state["z"])
+    assert np.array_equal(loaded["r"], state["r"])
+
+
+def test_async_save_matches_sync():
+    rng = np.random.default_rng(8)
+    state = _mk_state(rng)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12, async_mode=True)
+    t1 = ck.save(state)
+    # mutate immediately after (numpy is mutable — Chipmink captured
+    # digests?  no: the async saver must have snapshotted via graph build
+    # + the thread serializes from the live arrays, so for HOST state the
+    # caller must not mutate before wait(); jax.Arrays are immune).
+    ck.wait()
+    state["params"]["emb"][7] += 1
+    t2 = ck.save(state)
+    ck.wait()
+    a = ck.load(time_id=t1)
+    b = ck.load(time_id=t2)
+    assert not np.array_equal(a["params"]["emb"], b["params"]["emb"])
+    assert np.array_equal(b["params"]["emb"], state["params"]["emb"])
+
+
+def test_ablation_nocd_writes_everything():
+    rng = np.random.default_rng(9)
+    state = _mk_state(rng)
+    nocd = Chipmink(MemoryStore(), chunk_bytes=1 << 12, enable_cd=False)
+    nocd.save(state)
+    first = nocd.store.total_bytes()
+    nocd.save(state)  # unchanged, but NoCD must pay full snapshot
+    assert nocd.store.total_bytes() >= 2 * first * 0.95
+
+
+def test_thesaurus_capacity_zero_degrades_gracefully():
+    rng = np.random.default_rng(10)
+    state = _mk_state(rng)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12, thesaurus_capacity=0)
+    ck.save(state)
+    ck.save(state)
+    # with no thesaurus the store-level content addressing still dedups
+    assert ck.save_stats[-1]["pods_written"] == 0
+    assert ck.save_stats[-1]["pods_aliased"] > 0
+
+
+@given(chunk=sampled_from([256, 1024, 4096, 1 << 20]),
+       rows=integers(1, 500))
+def test_roundtrip_any_chunking(chunk, rows):
+    rng = np.random.default_rng(11)
+    state = {"a": rng.standard_normal((rows, 7)).astype(np.float32),
+             "b": rng.integers(0, 100, size=(3,)).astype(np.int64)}
+    ck = Chipmink(MemoryStore(), chunk_bytes=chunk)
+    t = ck.save(state)
+    loaded = ck.load(time_id=t)
+    assert np.array_equal(loaded["a"], state["a"])
+    assert np.array_equal(loaded["b"], state["b"])

@@ -1,0 +1,67 @@
+"""ObjectGraph construction: chunk grids, aliasing, determinism."""
+import numpy as np
+import pytest
+
+from repro.core.graph import (ALIAS, CHUNK, LEAF, ObjectGraph, build_graph,
+                              chunk_grid, chunk_slice, rebuild_tree)
+
+from proptest import given, integers, sampled_from
+
+
+def test_chunk_grid_basic():
+    elems, n = chunk_grid((100, 10), np.dtype(np.float32), 400)
+    assert elems == 100 and n == 10
+
+
+def test_chunk_grid_single():
+    assert chunk_grid((4, 4), np.dtype(np.float32), 1 << 20) == (16, 1)
+    assert chunk_grid((), np.dtype(np.float32), 16) == (1, 1)
+
+
+@given(rows=integers(1, 300), cols=integers(1, 17),
+       dt=sampled_from(["float32", "float16", "int8", "int64"]),
+       target=integers(8, 4096))
+def test_chunk_grid_properties(rows, cols, dt, target):
+    dtype = np.dtype(dt)
+    e, n = chunk_grid((rows, cols), dtype, target)
+    total = rows * cols
+    assert 1 <= e <= total
+    assert n == -(-total // e)
+    if n > 1:  # 4-byte alignment of chunk boundaries
+        assert (e * dtype.itemsize) % 4 == 0
+
+
+def test_graph_structure_and_alias():
+    a = np.zeros((64, 8), np.float32)
+    state = {"params": {"w": a, "tied": a, "b": np.ones(4, np.float32)},
+             "step": 3}
+    g = build_graph(state, chunk_bytes=256)
+    kinds = {n.key: n.kind for n in g.nodes.values()}
+    assert kinds["params/w"] == LEAF
+    assert kinds["params/tied"] == ALIAS
+    assert kinds["step"] == "scalar"
+    assert g.nodes[g.by_key["params/tied"]].alias_of == ("params", "w")
+    chunks = [n for n in g.chunk_nodes() if n.path == ("params", "w")]
+    assert len(chunks) == 8  # 64 rows * 32 B/row / 256 B
+    assert sum(n.size for n in chunks) == a.nbytes
+    assert set(g.variables) == {"params", "step"}
+
+
+def test_graph_deterministic():
+    state = {"a": np.arange(100, dtype=np.float32), "b": {"c": np.ones(3)}}
+    g1 = build_graph(state)
+    g2 = build_graph(state)
+    assert [n.key for n in g1.iter_dfs()] == [n.key for n in g2.iter_dfs()]
+
+
+def test_chunk_slice_covers_array():
+    a = np.arange(999 * 3, dtype=np.float32).reshape(999, 3)
+    g = build_graph({"a": a}, chunk_bytes=1024)
+    parts = [chunk_slice(a, n) for n in sorted(
+        g.chunk_nodes(), key=lambda n: n.chunk_index)]
+    assert np.array_equal(np.concatenate(parts), a.reshape(-1))
+
+
+def test_rebuild_tree():
+    flat = {"a/b/c": 1, "a/d": 2, "e": 3}
+    assert rebuild_tree(flat) == {"a": {"b": {"c": 1}, "d": 2}, "e": 3}

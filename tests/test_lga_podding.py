@@ -1,0 +1,132 @@
+"""LGA (Algorithm 1), podding engine, stability (§7.3), cost (Eq. 3)."""
+import numpy as np
+import pytest
+
+from repro.core import (BundleAll, LGA, RandomPolicy, SplitAll, TbH,
+                        build_graph, lga0, lga1, pod_graph)
+from repro.core.lga import BUNDLE, SPLIT_CONTINUE, PodState, expected_cost
+from repro.core.volatility import ConstantVolatility
+
+from proptest import given, integers, floats
+
+
+def _state(rng=None, n_leaves=6, rows=128):
+    rng = rng or np.random.default_rng(0)
+    return {"params": {f"w{i}": rng.standard_normal((rows, 4)).astype(np.float32)
+                       for i in range(n_leaves)},
+            "step": 1}
+
+
+def test_partition_property_all_policies():
+    """Pods are a disjoint partition covering every node, whatever the
+    policy (the PodGraph definition in §3.3)."""
+    g = build_graph(_state(), chunk_bytes=512)
+    for policy in (LGA(), BundleAll(), SplitAll(), RandomPolicy(3), TbH(),
+                   lga0(), lga1()):
+        asg = pod_graph(g, policy)
+        seen = set()
+        for pod in asg.pods.values():
+            for nid in pod.node_ids:
+                assert nid not in seen
+                seen.add(nid)
+        assert seen == set(g.nodes.keys())
+        # local memo ids are dense per pod
+        for pod in asg.pods.values():
+            locals_ = sorted(asg.node_local[n] for n in pod.node_ids)
+            assert locals_ == list(range(len(locals_)))
+
+
+def test_bundle_all_single_pod():
+    g = build_graph(_state(), chunk_bytes=512)
+    asg = pod_graph(g, BundleAll())
+    assert len(asg.pods) == 1
+
+
+def test_split_all_pod_per_node():
+    g = build_graph(_state(), chunk_bytes=512)
+    asg = pod_graph(g, SplitAll())
+    assert len(asg.pods) == g.n_nodes()
+
+
+def test_lga_decision_rule():
+    """Alg 1: bundle iff ΔL_bundle < ΔL_split."""
+    lga = LGA(volatility=ConstantVolatility(0.5), c_pod=1000.0)
+    from repro.core.graph import Node
+    node = Node(node_id=0, path=("x",), kind="chunk", size=100)
+    lga._lam = {"x": 0.5}
+    # small pod: bundle cost = s_p*λ_u + s_u*(λ_p+λ_u)
+    pod = PodState(pod_id=0, depth=0, size=100.0, lam=0.5)
+    # ΔL_bundle = 100*0.5 + 100*(1.0) = 150 < 1000 + 50 → bundle
+    assert lga.decide(node, pod) == BUNDLE
+    lga2 = LGA(volatility=ConstantVolatility(0.5), c_pod=10.0)
+    lga2._lam = {"y": 0.5}
+    node2 = Node(node_id=1, path=("y",), kind="chunk", size=100)
+    big = PodState(pod_id=0, depth=0, size=10000.0, lam=3.0)
+    # ΔL_bundle = 10000*0.5 + 100*3.5 = 5350 > 10 + 50 → split
+    assert lga2.decide(node2, big) == SPLIT_CONTINUE
+
+
+def test_lga_extremes_match_paper():
+    """λ≡0 bundles everything beyond the pod overhead; λ≡1 splits hot
+    objects aggressively (LGA-0/LGA-1 ablations, §8.7)."""
+    g = build_graph(_state(), chunk_bytes=512)
+    n0 = len(pod_graph(g, lga0()).pods)
+    n1 = len(pod_graph(g, lga1()).pods)
+    assert n0 <= n1  # zero volatility → no reason to split
+
+
+def test_podding_stability_sim_equals_one():
+    """§7.3: memoized decisions ⇒ Sim(A_i, A_{i+1}) = 1 on the overlap."""
+    rng = np.random.default_rng(1)
+    state = _state(rng)
+    g1 = build_graph(state, chunk_bytes=512)
+    policy = LGA()
+    a1 = pod_graph(g1, policy)
+    d1 = dict(policy._memo)
+    # new leaf appears; overlap decisions must be identical
+    state["params"]["new"] = rng.standard_normal((64, 4)).astype(np.float32)
+    g2 = build_graph(state, chunk_bytes=512)
+    a2 = pod_graph(g2, policy)
+    d2 = policy._memo
+    overlap = set(d1) & set(d2)
+    assert overlap, "expected overlapping decisions"
+    sim = sum(d1[k] == d2[k] for k in overlap) / len(overlap)
+    assert sim == 1.0
+
+
+def test_max_pod_depth_respected():
+    g = build_graph({"a": {"b": {"c": {"d": {"e": np.ones((4, 4))}}}}},
+                    chunk_bytes=8)
+    policy = LGA(volatility=ConstantVolatility(1.0), c_pod=0.0,
+                 max_pod_depth=2)
+    asg = pod_graph(g, policy)
+    assert max(p.depth for p in asg.pods.values()) <= 3  # root + 2 + final
+
+
+@given(c_pod=floats(1.0, 5000.0), lam=floats(0.0, 1.0))
+def test_expected_cost_formula(c_pod, lam):
+    pods = [(100.0, lam), (50.0, 2 * lam)]
+    got = expected_cost(pods, c_pod)
+    assert np.isclose(got, 2 * c_pod + 100 * lam + 100 * lam)
+
+
+def test_lga_cost_no_worse_than_extremes():
+    """LGA's greedy choice should not be beaten by BOTH extremes at once
+    (it locally picks the cheaper of bundle/split)."""
+    g = build_graph(_state(n_leaves=10, rows=512), chunk_bytes=1024)
+    c_pod = 1200.0
+
+    def cost_of(policy):
+        asg = pod_graph(g, policy)
+        lam = {k: 0.5 for k in g.by_key}
+        pairs = []
+        for pod in asg.pods.values():
+            s = sum(g.nodes[n].size for n in pod.node_ids)
+            l = sum(0.5 for _ in pod.node_ids)
+            pairs.append((s, l))
+        return expected_cost(pairs, c_pod)
+
+    lga_cost = cost_of(LGA(volatility=ConstantVolatility(0.5), c_pod=c_pod))
+    bundle_cost = cost_of(BundleAll())
+    split_cost = cost_of(SplitAll())
+    assert lga_cost <= max(bundle_cost, split_cost)

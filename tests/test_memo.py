@@ -1,0 +1,58 @@
+"""Virtual memo space (paper Eq. 1): paging, cross-pod offset, round trip."""
+import pytest
+
+from repro.core.memo import CROSS_POD_OFFSET, GlobalMemoSpace
+
+from proptest import given, integers
+
+
+def test_local_and_global_ids():
+    ms = GlobalMemoSpace(page_size=4)
+    for i in range(6):
+        assert ms.new_local(1) == i
+    # pod 1 owns two pages: [0,4) and [4,8)
+    assert ms.pods[1].pages == [0, 4]
+    assert ms.global_of_local(1, 0) == 0
+    assert ms.global_of_local(1, 5) == 5
+    # interleave another pod
+    assert ms.new_local(2) == 0
+    assert ms.pods[2].pages == [8]
+    assert ms.global_of_local(2, 0) == 8
+
+
+def test_virtual_refs_eq1():
+    ms = GlobalMemoSpace(page_size=4)
+    for _ in range(3):
+        ms.new_local(1)
+    ms.new_local(2)
+    # within-pod: natural number
+    assert ms.virtual_for_ref(1, 1, 2) == 2
+    # cross-pod: global + 2^31
+    v = ms.virtual_for_ref(1, 2, 0)
+    assert v >= CROSS_POD_OFFSET
+    assert ms.resolve(1, v) == (2, 0)
+    assert ms.resolve(1, 2) == (1, 2)
+
+
+@given(B=integers(1, 64), n1=integers(1, 200), n2=integers(1, 200))
+def test_roundtrip_resolution(B, n1, n2):
+    ms = GlobalMemoSpace(page_size=B)
+    for _ in range(n1):
+        ms.new_local(10)
+    for _ in range(n2):
+        ms.new_local(20)
+    for (pod, cnt) in ((10, n1), (20, n2)):
+        for m in range(0, cnt, max(1, cnt // 7)):
+            v = ms.virtual_for_ref(99, pod, m)
+            assert ms.resolve(99, v) == (pod, m)
+
+
+def test_persistence_roundtrip():
+    ms = GlobalMemoSpace(page_size=8)
+    for _ in range(20):
+        ms.new_local(1)
+    for _ in range(5):
+        ms.new_local(7)
+    ms2 = GlobalMemoSpace.from_page_tables(ms.page_tables(), page_size=8)
+    v = ms.virtual_for_ref(7, 1, 13)
+    assert ms2.resolve(7, v) == (1, 13)
