@@ -94,7 +94,8 @@ def bench_breakdown(n_ckpts: int = 8) -> List[Dict]:
     _run_trace(ck, TRACES["sparse_emb"](n_ckpts))
     agg: Dict[str, float] = {}
     for s in ck.save_stats[1:]:
-        for k in ("t_graph", "t_avf", "t_digest", "t_podding", "t_write"):
+        for k in ("t_graph", "t_avf", "t_digest", "t_podding", "t_decide",
+                  "t_gather", "t_write"):
             agg[k] = agg.get(k, 0.0) + s.get(k, 0.0)
     total = sum(agg.values()) or 1.0
     return [{"bench": "breakdown_fig10", "stage": k,

@@ -1,0 +1,138 @@
+"""Fingerprint-engine microbenchmark: batched bucketed dispatch vs the
+per-leaf oracle path, on the paper-trace workloads.
+
+    PYTHONPATH=src python -m benchmarks.bench_fingerprint
+
+For each workload trace (device-resident jax state) every save digests
+the full ObjectGraph twice — once through the per-leaf path
+(`ops.tree_fingerprint`: one Pallas dispatch + one blocking
+`jax.device_get` per leaf) and once through the batched engine
+(`batch.tree_fingerprint_batched`: one dispatch per size bucket, one
+device fetch total).  Reported per row:
+
+  * per-save digest wall time (median over warm saves) for both engines,
+  * the measured number of `jax.device_get` calls per save,
+  * bit-identity of batched digests against the per-leaf oracle.
+
+A final set of rows runs the full `Chipmink.save` pipeline and reports
+the save-loop sync contract from the recorded stats: 1 digest fetch +
+≤ 1 dirty-chunk gather per save.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List
+
+import numpy as np
+
+WORKLOADS = ("finetune", "sparse_emb")
+CHUNK_BYTES = 1 << 13
+
+
+def _to_device(state: Any) -> Any:
+    import jax.numpy as jnp
+    if isinstance(state, dict):
+        return {k: _to_device(v) for k, v in state.items()}
+    if hasattr(state, "shape") and hasattr(state, "dtype"):
+        return jnp.asarray(state)
+    return state
+
+
+class _SyncCounter:
+    """Counts blocking jax.device_get calls issued under the context."""
+
+    def __init__(self) -> None:
+        self.count = 0
+
+    def __enter__(self):
+        import jax
+        self._orig = jax.device_get
+
+        def counted(x):
+            self.count += 1
+            return self._orig(x)
+
+        jax.device_get = counted
+        return self
+
+    def __exit__(self, *exc):
+        import jax
+        jax.device_get = self._orig
+        return False
+
+
+def bench_fingerprint(n_ckpts: int = 6) -> List[Dict]:
+    from repro.core.graph import build_graph
+    from repro.kernels.batch import tree_fingerprint_batched
+    from repro.kernels.ops import tree_fingerprint
+
+    from .workloads import TRACES
+
+    rows: List[Dict] = []
+    for wname in WORKLOADS:
+        states = [_to_device(s) for s, _ in TRACES[wname](n_ckpts)]
+        per_leaf_ms, batched_ms = [], []
+        per_leaf_syncs, batched_syncs = [], []
+        identical = True
+        for i, state in enumerate(states):
+            graph = build_graph(state, chunk_bytes=CHUNK_BYTES)
+            with _SyncCounter() as sc:
+                t0 = time.perf_counter()
+                ref = tree_fingerprint(graph, chunk_bytes=CHUNK_BYTES)
+                t_leaf = time.perf_counter() - t0
+            n_leaf_syncs = sc.count
+            with _SyncCounter() as sc:
+                t0 = time.perf_counter()
+                got, _ = tree_fingerprint_batched(graph,
+                                                  chunk_bytes=CHUNK_BYTES)
+                t_batch = time.perf_counter() - t0
+            n_batch_syncs = sc.count
+            identical = identical and (got == ref)
+            if i > 0:                    # skip the cold (compile) save
+                per_leaf_ms.append(t_leaf * 1e3)
+                batched_ms.append(t_batch * 1e3)
+                per_leaf_syncs.append(n_leaf_syncs)
+                batched_syncs.append(n_batch_syncs)
+        p50_leaf = float(np.median(per_leaf_ms))
+        p50_batch = float(np.median(batched_ms))
+        rows.append({
+            "bench": "fingerprint_batch", "workload": wname,
+            "per_leaf_digest_ms": round(p50_leaf, 3),
+            "batched_digest_ms": round(p50_batch, 3),
+            "speedup_x": round(p50_leaf / p50_batch, 2),
+            "per_leaf_syncs_per_save": int(np.median(per_leaf_syncs)),
+            "batched_syncs_per_save": int(np.median(batched_syncs)),
+            "bit_identical": bool(identical),
+            "batched_strictly_faster": bool(p50_batch < p50_leaf),
+        })
+
+    # full save pipeline: sync contract from Chipmink stats
+    from repro.core import Chipmink, MemoryStore
+
+    for wname in WORKLOADS:
+        ck = Chipmink(MemoryStore(), chunk_bytes=CHUNK_BYTES)
+        for state, hints in TRACES[wname](n_ckpts):
+            ck.save(_to_device(state), **hints)
+        digest_syncs = [s["n_digest_syncs"] for s in ck.save_stats]
+        gather_syncs = [s["n_gather_syncs"] for s in ck.save_stats]
+        rows.append({
+            "bench": "fingerprint_batch", "workload": f"{wname}-save-loop",
+            "digest_ms_p50": round(1e3 * float(np.median(
+                [s["t_digest"] for s in ck.save_stats[1:]])), 3),
+            "gather_ms_p50": round(1e3 * float(np.median(
+                [s["t_gather"] for s in ck.save_stats[1:]])), 3),
+            "max_digest_syncs_per_save": int(max(digest_syncs)),
+            "max_gather_syncs_per_save": int(max(gather_syncs)),
+            "contract_1_digest_le1_gather": bool(
+                max(digest_syncs) <= 1 and max(gather_syncs) <= 1),
+        })
+    return rows
+
+
+def main() -> None:
+    for row in bench_fingerprint():
+        print(",".join(f"{k}={v}" for k, v in row.items()))
+
+
+if __name__ == "__main__":
+    main()

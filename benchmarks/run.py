@@ -16,7 +16,7 @@ from typing import Callable, Dict, List
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from . import bench_core  # noqa: E402
+from . import bench_core, bench_fingerprint  # noqa: E402
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "bench")
@@ -35,6 +35,7 @@ BENCHES: Dict[str, Callable[[], List[Dict]]] = {
     "thesaurus_fig19": bench_core.bench_thesaurus,
     "ascc_table3": bench_core.bench_ascc,
     "kernel_fingerprint": bench_core.bench_kernel,
+    "fingerprint_batch": bench_fingerprint.bench_fingerprint,
 }
 
 

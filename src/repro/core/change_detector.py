@@ -1,23 +1,35 @@
 """Change detector (paper §4.2), device half + host bookkeeping.
 
-Per save, the detector digests every *active* chunk (Pallas kernel on
-device, numpy twin for host state) and compares against the previous digest
-table.  Inactive chunks inherit their previous digest without being touched
-— the active-variable-filter guarantee (Thm 4.1) makes that sound.
+Per save, the detector digests every *active* chunk and compares against
+the previous digest table.  Inactive chunks inherit their previous digest
+without being touched — the active-variable-filter guarantee (Thm 4.1)
+makes that sound.
 
-Output: the new digest table + the set of dirty chunk keys.  Dirty chunks
-determine dirty pods; clean pods become synonym records (no payload write,
-no device→host transfer).
+The digest phase runs through the batched, size-bucketed engine
+(`kernels.batch`): one Pallas dispatch per word-width bucket over all
+chunks of all leaves, and a **single** `jax.device_get` for all (C, 4)
+digest rows per save — no per-leaf host syncs.  The host diff is a
+vectorized numpy matrix compare against a persistent key-indexed digest
+table (`self._table` / `self._index`); per-key dict probes survive only
+for slot→previous-row mapping and table upkeep, not for the compare
+itself.  Set ``batched=False`` to fall back to the per-leaf oracle path
+(`ops.leaf_fingerprint`), which is also what never-before-seen inactive
+chunks use.
+
+Output: the new digest table + the set of dirty chunk keys + the number
+of device syncs paid.  Dirty chunks determine dirty pods; clean pods
+become synonym records (no payload write, no device→host transfer).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, Optional, Set, Tuple
+from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 import numpy as np
 
+from ..kernels import batch as kbatch
 from ..kernels import ops as kops
-from .graph import CHUNK, ObjectGraph
+from .graph import CHUNK, Node, ObjectGraph
 
 
 @dataclasses.dataclass
@@ -26,56 +38,144 @@ class ChangeReport:
     dirty: Set[str]                    # dirty chunk keys
     active_chunks: int = 0
     skipped_chunks: int = 0
+    n_syncs: int = 0                   # blocking device fetches this save
 
 
 class ChangeDetector:
     def __init__(self, *, chunk_bytes: int = 1 << 22, seed: int = 0,
-                 use_kernel: bool = True, interpret: bool = True):
+                 use_kernel: bool = True, interpret: bool = True,
+                 batched: bool = True):
         self.chunk_bytes = chunk_bytes
         self.seed = seed
         self.use_kernel = use_kernel
         self.interpret = interpret
-        self.prev: Dict[str, bytes] = {}
+        self.batched = batched
+        # persistent key-indexed digest table: uint32 (N, 4) + key -> row
+        self._table: Optional[np.ndarray] = None
+        self._index: Dict[str, int] = {}
+        # leaf key -> chunk count fully present in the table (fast check
+        # for "has every chunk of this inactive leaf been seen before")
+        self._seen_leaves: Dict[str, int] = {}
 
+    # ------------------------------------------------------------------
+    def _digest(self, leaves: List[Node], graph: ObjectGraph
+                ) -> kbatch.DigestResult:
+        """Digest all chunks of `leaves` → slot-ordered DigestResult.
+
+        Batched mode: bucketed kernels + one device sync total.  Oracle
+        mode: per-leaf kernel calls + one sync per device leaf.
+        """
+        items = [(leaf.key, graph.arrays[leaf.key]) for leaf in leaves]
+        if self.batched:
+            return kbatch.digest_leaves(
+                items, chunk_bytes=self.chunk_bytes, seed=self.seed,
+                use_kernel=self.use_kernel, interpret=self.interpret)
+        keys: List[str] = []
+        mats: List[np.ndarray] = []
+        leaf_rows: Dict[str, int] = {}
+        n_syncs = 0
+        row = 0
+        for lkey, arr in items:
+            if isinstance(arr, np.ndarray):
+                dig = kops.leaf_fingerprint_np(
+                    arr, chunk_bytes=self.chunk_bytes, seed=self.seed)
+            else:
+                dig = kops.leaf_fingerprint(
+                    arr, chunk_bytes=self.chunk_bytes, seed=self.seed,
+                    use_kernel=self.use_kernel, interpret=self.interpret)
+                n_syncs += 1
+            leaf_rows[lkey] = row
+            keys.extend(f"{lkey}#[{ci}]" for ci in range(dig.shape[0]))
+            mats.append(np.asarray(dig, np.uint32))
+            row += dig.shape[0]
+        mat = (np.concatenate(mats, axis=0) if mats
+               else np.zeros((0, 4), np.uint32))
+        return kbatch.DigestResult(keys=keys, mat=mat, n_syncs=n_syncs,
+                                   leaf_rows=leaf_rows)
+
+    # ------------------------------------------------------------------
     def detect(self, graph: ObjectGraph,
                active_leaf_paths: Optional[Set[str]] = None) -> ChangeReport:
-        new_digests = kops.tree_fingerprint(
-            graph, active_leaf_paths=active_leaf_paths,
-            chunk_bytes=self.chunk_bytes, seed=self.seed,
-            use_kernel=self.use_kernel, interpret=self.interpret)
+        # 1. choose the leaves to digest: every active leaf, plus any
+        # inactive leaf with chunks the table has never seen (those must
+        # be digested now; their already-seen siblings still inherit).
+        digest_leaves: List[Node] = []
+        active_leaf_set: Set[str] = set()
+        for leaf in graph.leaf_nodes():
+            lkey = leaf.key
+            if active_leaf_paths is None or lkey in active_leaf_paths:
+                digest_leaves.append(leaf)
+                active_leaf_set.add(lkey)
+            elif self._seen_leaves.get(lkey) != len(leaf.children):
+                digest_leaves.append(leaf)
 
+        res = self._digest(digest_leaves, graph)
+        C = len(res.keys)
+
+        # 2. vectorized diff: (C, 4) matrix compare against the
+        # persistent table.  Rows with no previous entry are dirty.
+        if C:
+            prev_rows = np.fromiter(
+                (self._index.get(k, -1) for k in res.keys),
+                dtype=np.int64, count=C)
+        else:
+            prev_rows = np.zeros((0,), np.int64)
+        changed = np.ones(C, dtype=bool)
+        have = prev_rows >= 0
+        if self._table is not None and have.any():
+            idx = prev_rows[have]
+            changed[have] = (res.mat[have] != self._table[idx]).any(axis=1)
+        buf = res.mat.tobytes()
+
+        # 3. assemble the new digest table + dirty set, walking chunk
+        # nodes once.  Active chunks take the fresh digest; inactive
+        # chunks inherit unless never seen (then the fresh digest of the
+        # fallback-digested leaf is used and the chunk is dirty).
         digests: Dict[str, bytes] = {}
         dirty: Set[str] = set()
-        active = 0
-        skipped = 0
+        new_keys: List[str] = []
+        new_rows: List[int] = []        # rows into res.mat (or ~row into table)
+        seen_leaves: Dict[str, int] = {}
+        active = skipped = 0
         for node in graph.chunk_nodes():
             key = node.key
-            if key in new_digests:
+            lkey = "/".join(node.path)
+            seen_leaves[lkey] = seen_leaves.get(lkey, 0) + 1
+            if lkey in active_leaf_set:
                 active += 1
-                d = new_digests[key]
-                digests[key] = d
-                if self.prev.get(key) != d:
+                r = res.row_of(lkey, node.chunk_index)
+                digests[key] = buf[16 * r:16 * (r + 1)]
+                if changed[r]:
                     dirty.add(key)
+                new_keys.append(key)
+                new_rows.append(r)
             else:
                 skipped += 1
-                prev = self.prev.get(key)
-                if prev is None:
-                    # never seen: must treat as dirty and digest it now
-                    lkey = "/".join(node.path)
-                    arr = graph.arrays[lkey]
-                    if isinstance(arr, np.ndarray):
-                        dig = kops.leaf_fingerprint_np(
-                            arr, chunk_bytes=self.chunk_bytes, seed=self.seed)
-                    else:
-                        dig = kops.leaf_fingerprint(
-                            arr, chunk_bytes=self.chunk_bytes, seed=self.seed,
-                            use_kernel=self.use_kernel,
-                            interpret=self.interpret)
-                    d = kops.digest_to_bytes(dig[node.chunk_index])
-                    digests[key] = d
-                    dirty.add(key)
+                pr = self._index.get(key, -1)
+                if pr >= 0:
+                    digests[key] = self._table[pr].tobytes()
+                    new_keys.append(key)
+                    new_rows.append(~pr)    # negative: row of the OLD table
                 else:
-                    digests[key] = prev
-        self.prev = digests
+                    r = res.row_of(lkey, node.chunk_index)
+                    digests[key] = buf[16 * r:16 * (r + 1)]
+                    dirty.add(key)
+                    new_keys.append(key)
+                    new_rows.append(r)
+
+        # 4. persist: gather new table rows vectorized (fresh rows from
+        # res.mat, inherited rows from the old table).  The compact table
+        # is the only digest state retained across saves.
+        rows_arr = np.asarray(new_rows, np.int64)
+        table = np.empty((len(new_keys), 4), np.uint32)
+        fresh = rows_arr >= 0
+        if fresh.any():
+            table[fresh] = res.mat[rows_arr[fresh]]
+        if (~fresh).any():
+            table[~fresh] = self._table[~rows_arr[~fresh]]
+        self._table = table
+        self._index = {k: i for i, k in enumerate(new_keys)}
+        self._seen_leaves = seen_leaves
         return ChangeReport(digests=digests, dirty=dirty,
-                            active_chunks=active, skipped_chunks=skipped)
+                            active_chunks=active, skipped_chunks=skipped,
+                            n_syncs=res.n_syncs)

@@ -27,8 +27,8 @@ from .change_detector import ChangeDetector
 from .graph import ObjectGraph, build_graph, rebuild_tree
 from .lga import LGA, PoddingPolicy
 from .memo import GlobalMemoSpace
-from .podding import (PodAssignment, Unpodder, pod_graph,
-                      pod_structural_digest, serialize_pod)
+from .podding import (PodAssignment, Unpodder, batched_chunk_fetch,
+                      pod_graph, pod_structural_digest, serialize_pod)
 from .store import BaseStore, MemoryStore
 from .thesaurus import PodThesaurus
 from .volatility import FlipTracker
@@ -126,6 +126,7 @@ class Chipmink:
         stats["n_chunks"] = len(report.digests)
         stats["n_dirty_chunks"] = len(report.dirty)
         stats["t_digest"] = _time.perf_counter() - t0
+        stats["n_digest_syncs"] = report.n_syncs
 
         if self.tracker is not None:
             active_chunks = [n.key for n in graph.chunk_nodes()
@@ -139,10 +140,13 @@ class Chipmink:
         stats["n_pods"] = len(asg.pods)
         stats["t_podding"] = _time.perf_counter() - t0
 
+        # decide phase: structural digests + synonym lookups; no payload
+        # bytes move yet.
         t0 = _time.perf_counter()
         pods_meta: Dict[int, Dict[str, Any]] = {}
         written = aliased = 0
         bytes_before = self.store.total_bytes()
+        to_write: List[tuple] = []        # (pod, dig_hex or None, digest)
         for pid, pod in asg.pods.items():
             digest = pod_structural_digest(pod, graph, asg, report.digests)
             dig_hex = digest.hex()
@@ -152,23 +156,14 @@ class Chipmink:
                 if ref is not None:
                     skip = True           # synonymous pod (§4.2)
             if not skip:
-                if self.enable_cd:
-                    data = serialize_pod(pod, graph, asg)
-                    if self.store.put_pod(dig_hex, data):
-                        written += 1
-                    else:
-                        aliased += 1      # disk-level synonym
-                    self.thesaurus.insert(digest, dig_hex)
-                else:
+                if not self.enable_cd:
                     # NoCD baseline: every save writes unconditionally under
                     # a unique key (true snapshot cost, no dedup).
-                    data = serialize_pod(pod, graph, asg)
                     h = hashlib.blake2b(digest, digest_size=16,
                                         person=b"nocd")
                     h.update(time_id.to_bytes(8, "little"))
                     dig_hex = h.hexdigest()
-                    self.store.put_pod(dig_hex, data)
-                    written += 1
+                to_write.append((pod, dig_hex, digest))
             else:
                 aliased += 1
             pods_meta[pid] = {
@@ -176,6 +171,30 @@ class Chipmink:
                 "pages": asg.memo.pods[pid].pages if pid in asg.memo.pods else [],
                 "n": len(pod.node_ids),
             }
+        stats["t_decide"] = _time.perf_counter() - t0
+
+        # gather phase: ONE batched device fetch for every chunk of every
+        # dirty pod (clean pods never touch the device).
+        t0 = _time.perf_counter()
+        gather_nodes = [graph.node(nid) for pod, _, _ in to_write
+                        for nid in pod.node_ids]
+        chunk_bytes_of, gather_syncs = batched_chunk_fetch(graph, gather_nodes)
+        stats["t_gather"] = _time.perf_counter() - t0
+        stats["n_gather_syncs"] = gather_syncs
+
+        # write phase: serialize + store from the prefetched host bytes.
+        t0 = _time.perf_counter()
+        for pod, dig_hex, digest in to_write:
+            data = serialize_pod(pod, graph, asg, chunk_bytes_of)
+            if self.enable_cd:
+                if self.store.put_pod(dig_hex, data):
+                    written += 1
+                else:
+                    aliased += 1          # disk-level synonym
+                self.thesaurus.insert(digest, dig_hex)
+            else:
+                self.store.put_pod(dig_hex, data)
+                written += 1
         stats["t_write"] = _time.perf_counter() - t0
         stats["pods_written"] = written
         stats["pods_aliased"] = aliased

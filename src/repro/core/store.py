@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import os
 import threading
+import zlib
 from typing import Any, Dict, Iterable, List, Optional
 
 import msgpack
@@ -21,6 +22,12 @@ try:
     import zstandard as zstd
 except Exception:  # pragma: no cover
     zstd = None
+
+#: 1-byte codec tags prefixed to compressed pod blobs so a store written
+#: with one codec reads back under another (zstd preferred, stdlib zlib
+#: fallback — compress=True must always compress).
+_CODEC_ZSTD = b"\x01"
+_CODEC_ZLIB = b"\x02"
 
 
 class StoreStats:
@@ -31,8 +38,9 @@ class StoreStats:
         self.manifest_bytes = 0
         self.reads = 0
         self.read_bytes = 0
+        self.codec = ""               # codec used by the last compressed put
 
-    def as_dict(self) -> Dict[str, int]:
+    def as_dict(self) -> Dict[str, Any]:
         return dict(self.__dict__)
 
 
@@ -60,8 +68,14 @@ class BaseStore:
                 self.stats.pods_deduped += 1
                 return False
             blob = data
-            if self.compress and zstd is not None:
-                blob = zstd.ZstdCompressor(level=3).compress(data)
+            if self.compress:
+                if zstd is not None:
+                    blob = _CODEC_ZSTD + \
+                        zstd.ZstdCompressor(level=3).compress(data)
+                    self.stats.codec = "zstd"
+                else:
+                    blob = _CODEC_ZLIB + zlib.compress(data, 6)
+                    self.stats.codec = "zlib"
             self._put_raw(digest_hex, blob)
             self.stats.pods_written += 1
             self.stats.pod_bytes_written += len(blob)
@@ -72,8 +86,18 @@ class BaseStore:
             blob = self._get_raw(digest_hex)
             self.stats.reads += 1
             self.stats.read_bytes += len(blob)
-        if self.compress and zstd is not None:
-            return zstd.ZstdDecompressor().decompress(blob)
+        if self.compress:
+            tag, body = blob[:1], blob[1:]
+            if tag == _CODEC_ZSTD:
+                if zstd is None:
+                    raise RuntimeError(
+                        "pod compressed with zstd but zstandard missing")
+                return zstd.ZstdDecompressor().decompress(body)
+            if tag == _CODEC_ZLIB:
+                return zlib.decompress(body)
+            raise ValueError(
+                f"pod {digest_hex} has unknown codec tag {blob[:1]!r} — "
+                "corrupted blob or store written without codec tagging")
         return blob
 
     # -- manifests ----------------------------------------------------------

@@ -1,5 +1,6 @@
 """Pallas TPU kernels for Chipmink's perf-critical hot spot: on-device
 chunk fingerprinting (change detection at HBM bandwidth)."""
-from . import ops, ref
+from . import batch, ops, ref
+from .batch import digest_leaves, plan_leaves, tree_fingerprint_batched
 from .fingerprint import fingerprint_words
 from .ops import leaf_fingerprint, leaf_fingerprint_np, tree_fingerprint

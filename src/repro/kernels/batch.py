@@ -1,0 +1,324 @@
+"""Batched, size-bucketed fingerprint dispatch (§4.2 hot path, amortized).
+
+The per-leaf digest path (`ops.leaf_fingerprint`) pays one Pallas dispatch,
+one jit-cache entry per distinct (C, W) shape, and one blocking
+`jax.device_get` *per leaf per save*.  For a real training pytree with
+hundreds of leaves that dispatch/sync overhead dominates the actual
+memory-bound hashing.  This module amortizes all of it across the whole
+object graph:
+
+  * **Planner** — every chunk of every leaf is assigned a slot
+    (bucket, row) where the bucket is the power-of-two word width
+    ``pow2ceil(words_per_chunk)`` clamped to ``MIN_BUCKET_WORDS``.  Mixed
+    dtypes and ragged leaves land in the same bucket as long as their
+    chunk word-widths round to the same power of two; per-row true byte
+    lengths are folded into the digest exactly as in the per-leaf path,
+    so bucket padding is digest-neutral.
+  * **Packer** — a jit'd function (cached on the plan) bitcasts every
+    leaf to its uint32 word stream, reshapes it onto the chunk grid, and
+    concatenates all rows of a bucket into one (C_bucket, W_bucket)
+    matrix, padded up to a power-of-two row count so bucket shapes repeat
+    across saves and the kernel's jit cache stops recompiling.
+  * **Dispatch** — one `pallas_call` per bucket, row-blocked
+    (`fingerprint.fingerprint_words(rows=...)`): a grid cell digests up
+    to ``MAX_BLOCK_ROWS`` chunks at once, so small chunks cost a fraction
+    of a dispatch instead of one each.
+  * **Fetch** — all (C, 4) digest rows of all buckets leave the device in
+    a **single** `jax.device_get` at the end of the save (the
+    single-sync contract; `DigestResult.n_syncs` reports it).
+
+Host (numpy) leaves run through the same planner with the numpy digest
+twin — batching there amortizes the per-call weight-stream computation of
+`ref.fingerprint_words_np` across every row of a bucket.
+
+The per-leaf functions in ops.py remain the parity oracle: batched
+digests are bit-identical (see tests/test_batch_plan.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.graph import ObjectGraph, chunk_grid
+from .fingerprint import TILE, fingerprint_words
+from .ref import fingerprint_words_np, fingerprint_words_ref
+
+#: smallest bucket word width (512 B) — tiny leaves share one bucket
+MIN_BUCKET_WORDS = 128
+#: chunk rows digested per grid cell (block row count, power of two)
+MAX_BLOCK_ROWS = 64
+
+
+def pow2ceil(n: int) -> int:
+    return 1 << max(0, int(n - 1).bit_length())
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """Where one leaf's chunks land: rows [row0, row0+n_chunks) of a bucket."""
+    key: str
+    shape: Tuple[int, ...]
+    dtype: str
+    n_chunks: int
+    elems: int               # elements per full chunk (flat-range grid)
+    words_per_chunk: int     # uint32 word width of a full chunk
+    nbytes: int              # total leaf payload bytes
+    bucket: int              # bucket word width (power of two)
+    row0: int                # first row within the bucket
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSpec:
+    width: int               # words per row (power of two)
+    n_rows: int              # real chunk rows
+    padded_rows: int         # pow2ceil(n_rows) — shape-stable across saves
+    block_rows: int          # rows per kernel grid cell
+    tile: int                # inner tile width for the kernel
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPlan:
+    leaves: Tuple[LeafSlot, ...]
+    buckets: Tuple[BucketSpec, ...]   # ascending width; rows bucket-major
+    chunk_bytes: int
+
+    @property
+    def n_chunks(self) -> int:
+        return sum(b.n_rows for b in self.buckets)
+
+
+@functools.lru_cache(maxsize=512)
+def plan_leaves(specs: Tuple[Tuple[str, Tuple[int, ...], str], ...],
+                chunk_bytes: int) -> BatchPlan:
+    """Pack chunk slots of the given (key, shape, dtype) leaves into
+    power-of-two word-width buckets.  Deterministic: slots depend only on
+    the spec sequence and chunk_bytes, so plans (and the jit'd packers
+    keyed on them) are shared across saves."""
+    slots: List[LeafSlot] = []
+    rows_in_bucket: Dict[int, int] = {}
+    for key, shape, dtype in specs:
+        dt = np.dtype(dtype)
+        elems, n_chunks = chunk_grid(shape, dt, chunk_bytes)
+        total = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        nbytes = total * dt.itemsize
+        wpc = max(1, -(-(elems * dt.itemsize) // 4))
+        bucket = max(MIN_BUCKET_WORDS, pow2ceil(wpc))
+        row0 = rows_in_bucket.get(bucket, 0)
+        rows_in_bucket[bucket] = row0 + n_chunks
+        slots.append(LeafSlot(key=key, shape=tuple(shape), dtype=str(dtype),
+                              n_chunks=n_chunks, elems=elems,
+                              words_per_chunk=wpc, nbytes=nbytes,
+                              bucket=bucket, row0=row0))
+    buckets = []
+    for width in sorted(rows_in_bucket):
+        n_rows = rows_in_bucket[width]
+        padded = pow2ceil(n_rows)
+        block = min(MAX_BLOCK_ROWS, padded)
+        buckets.append(BucketSpec(width=width, n_rows=n_rows,
+                                  padded_rows=padded, block_rows=block,
+                                  tile=min(TILE, width)))
+    return BatchPlan(leaves=tuple(slots), buckets=tuple(buckets),
+                     chunk_bytes=chunk_bytes)
+
+
+@functools.lru_cache(maxsize=512)
+def _plan_slots(plan: BatchPlan) -> Tuple[Tuple[str, ...],
+                                          Tuple[Tuple[str, int], ...]]:
+    """(chunk keys in slot order, (leaf key, global row offset) pairs).
+
+    Slot order is bucket-major (ascending width), then row order within
+    the bucket.  Cached per plan so steady-state saves rebuild nothing.
+    """
+    base: Dict[int, int] = {}
+    off = 0
+    for b in plan.buckets:
+        base[b.width] = off
+        off += b.n_rows
+    ordered = sorted(plan.leaves, key=lambda s: (s.bucket, s.row0))
+    keys: List[str] = []
+    leaf_offsets: List[Tuple[str, int]] = []
+    for s in ordered:
+        row = base[s.bucket] + s.row0
+        leaf_offsets.append((s.key, row))
+        keys.extend(f"{s.key}#[{ci}]" for ci in range(s.n_chunks))
+    return tuple(keys), tuple(leaf_offsets)
+
+
+@functools.lru_cache(maxsize=512)
+def _plan_lengths(plan: BatchPlan) -> Tuple[np.ndarray, ...]:
+    """Per-bucket true-byte-length columns (padded rows fold length 0)."""
+    out = {b.width: np.zeros((b.padded_rows,), np.uint32)
+           for b in plan.buckets}
+    for s in plan.leaves:
+        lens = np.full((s.n_chunks,), s.elems * np.dtype(s.dtype).itemsize,
+                       np.uint32)
+        lens[-1] = s.nbytes - (s.n_chunks - 1) * s.elems * \
+            np.dtype(s.dtype).itemsize
+        out[s.bucket][s.row0:s.row0 + s.n_chunks] = lens
+    return tuple(out[b.width] for b in plan.buckets)
+
+
+def _pack_leaf_words_jnp(slot: LeafSlot, arr: Any) -> jnp.ndarray:
+    from .ops import to_words
+    w = to_words(arr)
+    need = slot.n_chunks * slot.words_per_chunk
+    have = int(w.shape[0])
+    if have != need:
+        w = jnp.pad(w, (0, need - have))
+    mat = w.reshape(slot.n_chunks, slot.words_per_chunk)
+    if slot.words_per_chunk != slot.bucket:
+        mat = jnp.pad(mat, ((0, 0), (0, slot.bucket - slot.words_per_chunk)))
+    return mat
+
+
+@functools.lru_cache(maxsize=512)
+def _packer_for(plan: BatchPlan):
+    """jit'd: leaf arrays (plan order) -> per-bucket (padded_rows, width)
+    uint32 word matrices.  One dispatch packs the whole pytree."""
+    def pack(*arrays):
+        rows: Dict[int, List[jnp.ndarray]] = {b.width: [] for b in plan.buckets}
+        for slot, arr in zip(plan.leaves, arrays):
+            rows[slot.bucket].append(_pack_leaf_words_jnp(slot, arr))
+        out = []
+        for b in plan.buckets:
+            # leaves were appended in plan order == row0 order
+            mats = sorted(zip((s.row0 for s in plan.leaves
+                               if s.bucket == b.width), rows[b.width]))
+            m = (jnp.concatenate([x for _, x in mats], axis=0)
+                 if len(mats) > 1 else mats[0][1])
+            if b.padded_rows != b.n_rows:
+                m = jnp.pad(m, ((0, b.padded_rows - b.n_rows), (0, 0)))
+            out.append(m)
+        return tuple(out)
+
+    return jax.jit(pack)
+
+
+def _pack_leaf_words_np(slot: LeafSlot, arr: np.ndarray) -> np.ndarray:
+    from .ops import to_words_np
+    w = to_words_np(arr)
+    need = slot.n_chunks * slot.words_per_chunk
+    if w.shape[0] != need:
+        w = np.pad(w, (0, need - w.shape[0]))
+    mat = w.reshape(slot.n_chunks, slot.words_per_chunk)
+    if slot.words_per_chunk != slot.bucket:
+        mat = np.pad(mat, ((0, 0), (0, slot.bucket - slot.words_per_chunk)))
+    return mat
+
+
+@dataclasses.dataclass
+class DigestResult:
+    """Digests of a leaf set in slot order (device buckets first)."""
+    keys: List[str]                    # chunk keys, aligned with mat rows
+    mat: np.ndarray                    # uint32 (C, 4)
+    n_syncs: int                       # device_get calls issued (0 or 1)
+    leaf_rows: Dict[str, int]          # leaf key -> first row of its chunks
+
+    def row_of(self, leaf_key: str, chunk_index: int) -> int:
+        return self.leaf_rows[leaf_key] + chunk_index
+
+
+def _digest_device(plan: BatchPlan, arrays: Sequence[Any], *, seed: int,
+                   use_kernel: bool, interpret: bool) -> List[np.ndarray]:
+    packed = _packer_for(plan)(*arrays)
+    lengths = _plan_lengths(plan)
+    digs = []
+    for b, words, lens in zip(plan.buckets, packed, lengths):
+        if use_kernel:
+            d = fingerprint_words(words, jnp.asarray(lens), seed=seed,
+                                  interpret=interpret, tile=b.tile,
+                                  rows=b.block_rows)
+        else:
+            d = fingerprint_words_ref(words, jnp.asarray(lens), seed=seed)
+        digs.append(d)
+    host = jax.device_get(digs)        # the ONE sync of the digest phase
+    return [np.asarray(h, np.uint32)[:b.n_rows]
+            for b, h in zip(plan.buckets, host)]
+
+
+def _digest_host(plan: BatchPlan, arrays: Sequence[np.ndarray], *,
+                 seed: int) -> List[np.ndarray]:
+    lengths = _plan_lengths(plan)
+    by_bucket: Dict[int, List[Tuple[int, np.ndarray]]] = {
+        b.width: [] for b in plan.buckets}
+    for slot, arr in zip(plan.leaves, arrays):
+        by_bucket[slot.bucket].append((slot.row0,
+                                       _pack_leaf_words_np(slot, arr)))
+    out = []
+    for b, lens in zip(plan.buckets, lengths):
+        mats = [m for _, m in sorted(by_bucket[b.width], key=lambda t: t[0])]
+        words = np.concatenate(mats, axis=0) if len(mats) > 1 else mats[0]
+        out.append(fingerprint_words_np(words, lens[:b.n_rows], seed=seed))
+    return out
+
+
+def digest_leaves(items: Sequence[Tuple[str, Any]], *, chunk_bytes: int,
+                  seed: int = 0, use_kernel: bool = True,
+                  interpret: bool = True) -> DigestResult:
+    """Digest every chunk of the given (leaf key, array) pairs.
+
+    Device (jax) leaves go through the bucketed Pallas path and cost one
+    `jax.device_get` total; host (numpy) leaves go through the bucketed
+    numpy twin and cost zero.  Result rows are bucket-major with all
+    device buckets first.
+    """
+    dev: List[Tuple[str, Any]] = []
+    host: List[Tuple[str, Any]] = []
+    for key, arr in items:
+        (host if isinstance(arr, np.ndarray) else dev).append((key, arr))
+
+    keys: List[str] = []
+    mats: List[np.ndarray] = []
+    leaf_rows: Dict[str, int] = {}
+    n_syncs = 0
+    offset = 0
+    for group, is_dev in ((dev, True), (host, False)):
+        if not group:
+            continue
+        specs = tuple(
+            (k, tuple(int(d) for d in a.shape), str(np.dtype(a.dtype)))
+            for k, a in group)
+        plan = plan_leaves(specs, chunk_bytes)
+        arrays = [a for _, a in group]
+        if is_dev:
+            bucket_digs = _digest_device(plan, arrays, seed=seed,
+                                         use_kernel=use_kernel,
+                                         interpret=interpret)
+            n_syncs += 1
+        else:
+            bucket_digs = _digest_host(plan, arrays, seed=seed)
+        plan_keys, plan_offsets = _plan_slots(plan)
+        keys.extend(plan_keys)
+        mats.extend(bucket_digs)
+        for lkey, row in plan_offsets:
+            leaf_rows[lkey] = offset + row
+        offset += plan.n_chunks
+
+    mat = (np.concatenate(mats, axis=0) if mats
+           else np.zeros((0, 4), np.uint32))
+    return DigestResult(keys=keys, mat=mat, n_syncs=n_syncs,
+                        leaf_rows=leaf_rows)
+
+
+def tree_fingerprint_batched(graph: ObjectGraph, *, active_leaf_paths=None,
+                             chunk_bytes: int = 1 << 22, seed: int = 0,
+                             use_kernel: bool = True, interpret: bool = True
+                             ) -> Tuple[Dict[str, bytes], int]:
+    """Batched drop-in for `ops.tree_fingerprint`: {chunk key: 16-byte
+    digest} for every (active) leaf, plus the number of device syncs paid
+    (≤ 1)."""
+    items = []
+    for leaf in graph.leaf_nodes():
+        if active_leaf_paths is not None and leaf.key not in active_leaf_paths:
+            continue
+        items.append((leaf.key, graph.arrays[leaf.key]))
+    res = digest_leaves(items, chunk_bytes=chunk_bytes, seed=seed,
+                        use_kernel=use_kernel, interpret=interpret)
+    buf = res.mat.tobytes()
+    out = {k: buf[16 * i:16 * (i + 1)] for i, k in enumerate(res.keys)}
+    return out, res.n_syncs

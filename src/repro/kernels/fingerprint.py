@@ -5,7 +5,7 @@ The paper's change detector hashes pod bytes with xxhash on the host CPU
 state across the device→host link each save.  The TPU-native adaptation
 computes the 128-bit digest *on device*:
 
-  * the word stream of each chunk is tiled into (1, TILE) uint32 VMEM
+  * the word stream of each chunk is tiled into (rows, TILE) uint32 VMEM
     blocks (TILE = 4096 words = 16 KiB; last-dim multiple of 128 lanes),
   * per block, four weighted sums are accumulated on the VPU (integer
     multiply-add only; no MXU) — arithmetic intensity ≈ 1 op/byte, so the
@@ -14,9 +14,17 @@ computes the 128-bit digest *on device*:
     ~16 GB/s PCIe hop),
   * only 16 bytes per chunk leave the device; clean chunks never move.
 
+The kernel is *row-blocked*: a grid cell digests `rows` chunks at once
+(each digest lane is a per-row weighted reduction over the tile), so the
+grid of a batched (C, W) bucket is (C / rows, W / TILE) instead of
+(C, W / TILE).  Grid-cell dispatch is the dominant overhead both in
+interpret mode and for small chunks on hardware (a 2048-word chunk is a
+single 8 KiB DMA; blocking 64 of them turns it into a 512 KiB DMA), so
+the batched planner in batch.py always calls with rows > 1.
+
 The digest spec (and the oracle) live in ref.py; weighted sums are
 order-independent, so the sequential TPU grid can accumulate partial tile
-sums into the (1, 4) output block, which is revisited across the inner
+sums into the (rows, 4) output block, which is revisited across the inner
 grid dimension.
 """
 from __future__ import annotations
@@ -34,57 +42,66 @@ TILE = 4096  # uint32 words per VMEM block (16 KiB); multiple of 128 lanes
 
 def _fingerprint_kernel(words_ref, lengths_ref, out_ref, *, seed: int,
                         tile: int):
-    """Grid = (C, W // tile).  Block shapes: words (1, tile), lengths (1, 1),
-    out (1, DIGEST_WORDS) revisited along the inner grid dim."""
+    """Grid = (C // rows, W // tile).  Block shapes: words (rows, tile),
+    lengths (rows, 1), out (rows, DIGEST_WORDS) revisited along the inner
+    grid dim."""
     j = pl.program_id(1)
     base = (j * tile).astype(jnp.uint32)
     pos = base + jax.lax.broadcasted_iota(jnp.uint32, (1, tile), 1)
-    x = words_ref[...].astype(jnp.uint32)
+    x = words_ref[...].astype(jnp.uint32)          # (rows, tile)
 
     partial = []
     for d in range(DIGEST_WORDS):
         w = mix32(pos * jnp.uint32(LANE_PRIMES[d]) + jnp.uint32(seed)
                   + jnp.uint32((d * STREAM_SALT) & 0xFFFFFFFF))
-        partial.append(jnp.sum(x * w, dtype=jnp.uint32))
-    part = jnp.stack(partial).reshape(1, DIGEST_WORDS)
+        partial.append(jnp.sum(x * w, axis=1, dtype=jnp.uint32))
+    part = jnp.stack(partial, axis=1)              # (rows, DIGEST_WORDS)
 
     @pl.when(j == 0)
     def _init():
-        length = lengths_ref[0, 0].astype(jnp.uint32)
+        length = lengths_ref[...].astype(jnp.uint32)[:, 0]   # (rows,)
         folds = []
         for d in range(DIGEST_WORDS):
             folds.append(mix32(length ^ jnp.uint32(((d + 1) * PHI32) & 0xFFFFFFFF))
                          + jnp.uint32(seed))
-        out_ref[...] = jnp.stack(folds).reshape(1, DIGEST_WORDS)
+        out_ref[...] = jnp.stack(folds, axis=1)
 
     out_ref[...] += part
 
 
-@functools.partial(jax.jit, static_argnames=("seed", "interpret", "tile"))
+@functools.partial(jax.jit,
+                   static_argnames=("seed", "interpret", "tile", "rows"))
 def fingerprint_words(words: jnp.ndarray, lengths: jnp.ndarray, *,
                       seed: int = 0, interpret: bool = True,
-                      tile: int = TILE) -> jnp.ndarray:
+                      tile: int = TILE, rows: int = 1) -> jnp.ndarray:
     """Digest uint32 words (C, W) -> uint32 (C, 4) via the Pallas kernel.
 
-    W is padded to a multiple of `tile` (zero words are digest-neutral;
-    true byte lengths are folded separately — see ref.py).
+    W is padded to a multiple of `tile` and C to a multiple of `rows`
+    (zero words are digest-neutral; true byte lengths are folded
+    separately — see ref.py; padding rows are sliced off the output).
+    `rows` chunks share one grid cell — the batched planner uses this to
+    amortize dispatch across every chunk of every leaf in a bucket.
     """
     words = jnp.asarray(words, jnp.uint32)
     C, W = words.shape
     Wp = max(tile, -(-W // tile) * tile)
-    if Wp != W:
-        words = jnp.pad(words, ((0, 0), (0, Wp - W)))
+    Cp = max(rows, -(-C // rows) * rows)
+    if Wp != W or Cp != C:
+        words = jnp.pad(words, ((0, Cp - C), (0, Wp - W)))
     lengths2d = jnp.asarray(lengths, jnp.uint32).reshape(C, 1)
+    if Cp != C:
+        lengths2d = jnp.pad(lengths2d, ((0, Cp - C), (0, 0)))
 
-    grid = (C, Wp // tile)
-    return pl.pallas_call(
+    grid = (Cp // rows, Wp // tile)
+    out = pl.pallas_call(
         functools.partial(_fingerprint_kernel, seed=seed, tile=tile),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, tile), lambda i, j: (i, j)),
-            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((rows, tile), lambda i, j: (i, j)),
+            pl.BlockSpec((rows, 1), lambda i, j: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((1, DIGEST_WORDS), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((C, DIGEST_WORDS), jnp.uint32),
+        out_specs=pl.BlockSpec((rows, DIGEST_WORDS), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Cp, DIGEST_WORDS), jnp.uint32),
         interpret=interpret,
     )(words, lengths2d)
+    return out[:C]

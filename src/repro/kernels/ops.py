@@ -5,6 +5,29 @@ word stream, splits it on the ObjectGraph's deterministic row-block grid,
 and returns one 128-bit digest per chunk.  `tree_fingerprint` maps the graph
 of a state pytree to a {chunk key → digest bytes} table — the device half of
 the change detector (§4.2).
+
+Fingerprint pipeline
+--------------------
+The per-leaf functions here are the **parity oracle**; the save hot path
+runs the batched engine in `batch.py`.  Layout and contract:
+
+  * Bucket layout: every chunk of every leaf is a row of exactly one
+    power-of-two word-width bucket (`pow2ceil(words_per_chunk)`, min 128
+    words).  Rows are bucket-major: buckets ascend by width, a leaf's
+    chunks are consecutive rows within its bucket.  Row counts are padded
+    to the next power of two so (C, W) bucket shapes repeat across saves
+    and the kernel jit cache stops recompiling; padded rows carry zero
+    words and a zero folded length and are sliced off on the host.
+  * Digest-neutral padding: zero words contribute nothing to the
+    weighted sums and each row folds its own true byte length (ref.py),
+    so a 2048-word chunk digests bit-identically whether it sits in a
+    (1, 2048) per-leaf call or a (512, 2048) bucket row.
+  * Single-sync contract: a save issues one `pallas_call` per bucket and
+    fetches **all** (C, 4) digest rows with one `jax.device_get` at the
+    end — never one sync per leaf.  The write path mirrors it: dirty-pod
+    chunk payloads move in one batched `jax.device_get`
+    (`core.podding.batched_chunk_fetch`), so a full save costs 1 digest
+    fetch + ≤ 1 payload gather.
 """
 from __future__ import annotations
 

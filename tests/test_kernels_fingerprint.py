@@ -59,6 +59,7 @@ def test_words_conversion_device_host_parity(dt):
     assert (w1 == w2).all()
 
 
+@pytest.mark.slow
 @given(rows=integers(1, 700), cols=integers(1, 9),
        dt=sampled_from(["float32", "float16", "int8"]),
        chunk=sampled_from([64, 256, 4096, 1 << 20]))

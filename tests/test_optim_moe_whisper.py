@@ -89,6 +89,7 @@ def test_clip_by_global_norm(norm):
 # MoE dispatch invariants
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 @given(n=integers(8, 64), X=integers(4, 16), k=integers(1, 4))
 def test_router_dispatch_invariants(n, X, k):
     cfg = MoEConfig(n_experts=X, top_k=min(k, X), expert_ff=8, n_groups=2)

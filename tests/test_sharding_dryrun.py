@@ -4,9 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.launch.dryrun import parse_collectives
+from repro.launch.mesh import make_mesh_compat
 from repro.parallel.sharding import (batch_spec, set_rule_overrides,
                                      spec_for, tree_shardings)
 
@@ -14,9 +15,8 @@ from repro.parallel.sharding import (batch_spec, set_rule_overrides,
 @pytest.fixture(scope="module")
 def mesh():
     # 1-device mesh with the production axis names (sizes 1 → rules drop)
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2,
-                         devices=jax.devices()[:1])
+    return make_mesh_compat((1, 1), ("data", "model"),
+                            devices=jax.devices()[:1])
 
 
 class FakeMesh:

@@ -21,6 +21,7 @@ from repro.train.optimizer import OptConfig, opt_init
 from repro.train.train_step import init_train_state, make_train_step
 
 
+@pytest.mark.slow
 def test_loss_decreases():
     out = train("qwen1.5-0.5b", steps=30, save_every=10, global_batch=4,
                 seq_len=64, log=False)
@@ -28,6 +29,7 @@ def test_loss_decreases():
     assert np.mean(losses[-5:]) < np.mean(losses[:5])
 
 
+@pytest.mark.slow
 def test_checkpoint_resume_bit_exact():
     """Stop at step 20, resume from the Chipmink checkpoint, and verify
     the resumed run reproduces the uninterrupted run's loss curve (data
@@ -162,9 +164,8 @@ def test_grad_quantization_error_feedback():
 
 
 def test_compressed_psum_shardmap():
-    mesh = jax.make_mesh((1,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,),
-                         devices=jax.devices()[:1])
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((1,), ("d",), devices=jax.devices()[:1])
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
     x = jnp.asarray(np.random.default_rng(0).standard_normal(256),
@@ -176,6 +177,7 @@ def test_compressed_psum_shardmap():
     assert rel < 0.02
 
 
+@pytest.mark.slow
 def test_grad_compress_training_converges():
     out = train("qwen1.5-0.5b", steps=20, save_every=20, global_batch=4,
                 seq_len=64, log=False, grad_compress=True)
