@@ -1,0 +1,191 @@
+"""Incremental save pipeline benchmark: cached graph build + delta
+re-podding + pod-digest cache vs the from-scratch host path, plus the
+double-buffered async overlap contract.
+
+    PYTHONPATH=src python -m benchmarks.bench_incremental [--quick]
+
+Workload: the sparse-update regime the tentpole targets — a large
+embedding + optimizer slot where ≤1% of chunks are dirty per save.  Two
+`Chipmink` instances replay the same mutate-then-save trajectory, one
+with `incremental=True` and one with `incremental=False` (the parity
+oracle); reported per row:
+
+  * median `t_graph + t_podding` for both paths and the speedup
+    (acceptance: ≥5x on ≤1% dirty chunks),
+  * reuse counters (`n_nodes_reused`, `n_pods_reused`,
+    `n_pod_digests_reused`),
+  * bit-identity of manifests (modulo the volatile stats block) and pod
+    bytes between the two instances,
+  * async double-buffering: overlapped submits and join-before-submit
+    stalls (acceptance: zero stalls when the previous save finishes
+    before the next `save()` call).
+
+The full per-save trajectory (t_graph, t_podding, t_total, reuse
+counters) is dumped to ``experiments/bench/BENCH_incremental.json`` so CI
+can diff save-latency regressions per PR.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "bench", "BENCH_incremental.json")
+
+#: (rows, d, dirty rows/save, saves, chunk_bytes) — ~0.24% dirty chunks
+FULL_CFG = (16384, 64, 8, 8, 1 << 12)
+QUICK_CFG = (4096, 32, 4, 5, 1 << 12)
+
+
+def _trajectory(rows: int, d: int, dirty_rows: int, n_saves: int,
+                seed: int = 0):
+    """Yield the same mutate-then-save trajectory deterministically."""
+    rng = np.random.default_rng(seed)
+    emb = rng.standard_normal((rows, d)).astype(np.float32)
+    mu = np.zeros_like(emb)
+    for step in range(n_saves):
+        if step:
+            idx = rng.integers(0, rows, size=dirty_rows)
+            emb[idx] += 1e-2
+            mu[idx] = 0.9 * mu[idx] + 1e-2
+        yield {"params": {"emb": emb}, "opt": {"mu": mu}, "step": step}
+
+
+def _strip(manifest: Dict) -> Dict:
+    return {k: v for k, v in manifest.items() if k != "stats"}
+
+
+def _replay(incremental: bool, cfg: Tuple[int, ...]):
+    from repro.core import Chipmink, MemoryStore
+    rows, d, dirty, n_saves, chunk = cfg
+    ck = Chipmink(MemoryStore(), chunk_bytes=chunk, incremental=incremental)
+    t_total: List[float] = []
+    for state in _trajectory(rows, d, dirty, n_saves):
+        t0 = time.perf_counter()
+        ck.save(state)
+        t_total.append(time.perf_counter() - t0)
+    return ck, t_total
+
+
+def bench_incremental(quick: bool = False) -> List[Dict]:
+    cfg = QUICK_CFG if quick else FULL_CFG
+    rows_out: List[Dict] = []
+
+    inc, inc_total = _replay(True, cfg)
+    ref, ref_total = _replay(False, cfg)
+
+    # artifact parity between the two pipelines.  A divergence must come
+    # out as artifacts_identical=False in the contract row, not as a
+    # KeyError that kills the bench before it reports.
+    identical = True
+    for tid in inc.store.list_time_ids():
+        mi, mr = inc.store.get_manifest(tid), ref.store.get_manifest(tid)
+        if _strip(mi) != _strip(mr):
+            identical = False
+        for meta in mi["pods"].values():
+            d = meta["d"]
+            if not (inc.store.has_pod(d) and ref.store.has_pod(d)):
+                identical = False
+            elif inc.store.get_pod(d) != ref.store.get_pod(d):
+                identical = False
+
+    def med(stats, key):
+        return float(np.median([s[key] for s in stats[1:]]))
+
+    gp_inc = med(inc.save_stats, "t_graph") + med(inc.save_stats, "t_podding")
+    gp_ref = med(ref.save_stats, "t_graph") + med(ref.save_stats, "t_podding")
+    n_chunks = inc.save_stats[-1]["n_chunks"]
+    dirty_frac = inc.save_stats[-1]["n_dirty_chunks"] / max(n_chunks, 1)
+    rows_out.append({
+        "bench": "incremental", "workload": "sparse_update",
+        "dirty_chunk_frac": round(dirty_frac, 4),
+        "graph_podding_ms_scratch": round(gp_ref * 1e3, 3),
+        "graph_podding_ms_incremental": round(gp_inc * 1e3, 3),
+        "speedup_x": round(gp_ref / gp_inc, 2),
+        "meets_5x": bool(gp_ref / gp_inc >= 5.0),
+        "t_total_ms_scratch": round(1e3 * float(np.median(ref_total[1:])), 3),
+        "t_total_ms_incremental": round(1e3 * float(np.median(inc_total[1:])),
+                                        3),
+        "n_nodes_reused_p50": int(np.median(
+            [s["n_nodes_reused"] for s in inc.save_stats[1:]])),
+        "n_pods_reused_p50": int(np.median(
+            [s["n_pods_reused"] for s in inc.save_stats[1:]])),
+        "n_pod_digests_reused_p50": int(np.median(
+            [s["n_pod_digests_reused"] for s in inc.save_stats[1:]])),
+        "artifacts_identical": bool(identical),
+    })
+
+    # async double-buffering: paced submits (previous save always finishes
+    # first) must report zero join-before-submit stalls while still
+    # overlapping submit with the in-flight body.
+    from repro.core import Chipmink, MemoryStore
+    ck = Chipmink(MemoryStore(), chunk_bytes=cfg[4], async_mode=True)
+    submit_ms: List[float] = []
+    for state in _trajectory(*QUICK_CFG[:4]):
+        t0 = time.perf_counter()
+        ck.save(state)
+        submit_ms.append((time.perf_counter() - t0) * 1e3)
+        ck.wait()                       # pace: previous save retires first
+    paced_stalls = ck.saver.n_stalls
+
+    ck2 = Chipmink(MemoryStore(), chunk_bytes=cfg[4], async_mode=True)
+    for state in _trajectory(*QUICK_CFG[:4]):
+        # back-to-back submits overlap the in-flight body, so the host
+        # buffers the body reads must be frozen per save (the
+        # snapshot-before-overlap rule: numpy leaves are mutable).
+        snap = {"params": {"emb": state["params"]["emb"].copy()},
+                "opt": {"mu": state["opt"]["mu"].copy()},
+                "step": state["step"]}
+        ck2.save(snap)
+    ck2.wait()
+    rows_out.append({
+        "bench": "incremental", "workload": "async_overlap",
+        "paced_submit_stalls": int(paced_stalls),
+        "zero_stalls_when_paced": bool(paced_stalls == 0),
+        "overlapped_submits": int(ck2.saver.n_overlapped),
+        "backpressure_stalls": int(ck2.saver.n_stalls),
+        "submit_ms_p50": round(float(np.median(submit_ms)), 3),
+    })
+
+    # trajectory dump for per-PR regression diffing
+    os.makedirs(os.path.dirname(OUT_JSON), exist_ok=True)
+    traj = {
+        "config": {"rows": cfg[0], "d": cfg[1], "dirty_rows": cfg[2],
+                   "n_saves": cfg[3], "chunk_bytes": cfg[4],
+                   "quick": quick},
+        "incremental": [_traj_row(s) for s in inc.save_stats],
+        "from_scratch": [_traj_row(s) for s in ref.save_stats],
+        "summary": rows_out,
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(traj, f, indent=2, sort_keys=True)
+    return rows_out
+
+
+def _traj_row(s: Dict[str, Any]) -> Dict[str, Any]:
+    keys = ("time_id", "t_graph", "t_podding", "t_decide", "t_write",
+            "n_nodes_reused", "n_pods_reused", "n_pod_digests_reused",
+            "n_dirty_chunks", "pods_written")
+    out = {k: s[k] for k in keys if k in s}
+    out["t_total"] = sum(s.get(k, 0.0) for k in
+                         ("t_graph", "t_avf", "t_digest", "t_podding",
+                          "t_decide", "t_gather", "t_write"))
+    return out
+
+
+def main() -> None:
+    import argparse
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="small config for CI smoke runs")
+    args = p.parse_args()
+    for row in bench_incremental(quick=args.quick):
+        print(",".join(f"{k}={v}" for k, v in row.items()))
+
+
+if __name__ == "__main__":
+    main()

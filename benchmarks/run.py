@@ -4,6 +4,11 @@
 
 Prints the contract CSV ``name,us_per_call,derived`` (one line per
 benchmark row) and writes full row dumps to experiments/bench/*.csv.
+The ``incremental`` bench additionally dumps its per-save trajectory
+(t_graph, t_podding, t_total, reuse counters, for both the incremental
+and the from-scratch pipeline) to
+``experiments/bench/BENCH_incremental.json`` for per-PR regression
+diffing.
 """
 from __future__ import annotations
 
@@ -16,7 +21,7 @@ from typing import Callable, Dict, List
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from . import bench_core, bench_fingerprint  # noqa: E402
+from . import bench_core, bench_fingerprint, bench_incremental  # noqa: E402
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "bench")
@@ -36,6 +41,7 @@ BENCHES: Dict[str, Callable[[], List[Dict]]] = {
     "ascc_table3": bench_core.bench_ascc,
     "kernel_fingerprint": bench_core.bench_kernel,
     "fingerprint_batch": bench_fingerprint.bench_fingerprint,
+    "incremental": bench_incremental.bench_incremental,
 }
 
 

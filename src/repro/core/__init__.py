@@ -9,6 +9,7 @@ Public API:
 """
 from .checkpoint import Chipmink, TimeID, reflow
 from .graph import ObjectGraph, build_graph, chunk_grid, rebuild_tree
+from .graph_cache import GraphCache, IncrementalBuildInfo
 from .lga import (BUNDLE, SPLIT_CONTINUE, SPLIT_FINAL, BundleAll, LGA,
                   PoddingPolicy, RandomPolicy, SplitAll, TbH, expected_cost,
                   lga0, lga1)

@@ -18,6 +18,7 @@ fingerprinting everything else (the paper's biggest save-time lever, §8.8).
 """
 from __future__ import annotations
 
+import bisect
 from typing import Dict, Iterable, Optional, Set
 
 from .graph import LEAF, ObjectGraph, path_str
@@ -25,15 +26,24 @@ from .podding import PodAssignment
 
 
 def leaves_under(graph: ObjectGraph, prefixes: Iterable[str]) -> Set[str]:
-    """All leaf paths under any of the given path prefixes."""
-    prefixes = list(prefixes)
+    """All leaf paths under any of the given path prefixes.
+
+    Answered per prefix with bisect range scans over the graph's sorted
+    LEAF-only key list (O(log L + leaf matches)) instead of scanning
+    every leaf for every prefix — and without materializing chunk keys,
+    which outnumber leaves on large chunked arrays.  A key lies in
+    [pre + "/", pre + "0") iff it starts with "pre/" ("0" = chr(ord("/")
+    + 1)), so the ranges need no post-filtering.
+    """
     out: Set[str] = set()
-    for node in graph.leaf_nodes():
-        p = node.key
-        for pre in prefixes:
-            if p == pre or p.startswith(pre + "/"):
-                out.add(p)
-                break
+    ks = graph.sorted_leaf_keys()
+    for pre in prefixes:
+        i = bisect.bisect_left(ks, pre)
+        if i < len(ks) and ks[i] == pre:
+            out.add(pre)
+        lo = bisect.bisect_left(ks, pre + "/")
+        hi = bisect.bisect_left(ks, pre + "0")
+        out.update(ks[lo:hi])
     return out
 
 

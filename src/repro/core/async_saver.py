@@ -1,11 +1,11 @@
-"""Asynchronous saving (paper §6.1–§6.2).
+"""Asynchronous saving (paper §6.1–§6.2), double-buffered.
 
 A single background *podding thread* runs the heavy half of a save
 (digesting, podding, serialization, storage writes) while the training/
 serving loop continues.  Two non-reentrant locks suffice (§6.2):
 
   * ``l_ns``     — namespace lock: makes shared host-side structures
-                   (thesaurus, flip tracker, store indices) thread-safe;
+                   (thesaurus, store indices) thread-safe;
   * ``l_active`` — held for the duration of a save over the *active*
                    variables.  On-device jax.Arrays are immutable, so the
                    snapshot reference alone is the lock for device state;
@@ -15,49 +15,103 @@ serving loop continues.  Two non-reentrant locks suffice (§6.2):
                    must not donate active leaves while a save is in
                    flight.
 
-Only one save may be in flight (paper: a new save joins the previous
-podding thread first).
+Double buffering (the departure from the paper's single-flight rule):
+``submit`` no longer joins the previous save.  Up to ``depth`` saves may
+be in flight — one running on the worker plus ``depth - 1`` queued — so
+save N's decide/gather/write overlaps step N+1's compute.  Submitting
+while the pipeline is full blocks until a slot frees (backpressure), and
+each such block is counted in ``n_stalls``; a caller whose previous save
+finishes before the next ``save()`` therefore observes zero stalls.
+Save *bodies* still execute strictly FIFO on one worker thread, which is
+what keeps the cross-save state (digest table, previous PodAssignment,
+thesaurus) free of write races; the caller-side snapshot (graph build at
+``save()`` call time) is what makes the overlap sound — see the
+"Incremental save pipeline" contract in ``checkpoint.py``.
 """
 from __future__ import annotations
 
 import threading
-from typing import Any, Callable, Optional
+from collections import deque
+from typing import Any, Callable, Deque, Optional
 
 
 class AsyncSaver:
-    def __init__(self) -> None:
+    def __init__(self, depth: int = 2) -> None:
         self.l_ns = threading.Lock()        # namespace lock
         self.l_active = threading.Lock()    # active-variable lock
-        self._thread: Optional[threading.Thread] = None
+        self.depth = max(1, int(depth))     # max saves in flight
+        self._cv = threading.Condition()
+        self._queue: Deque[Callable[[], Any]] = deque()
+        self._inflight = 0                  # queued + running
+        self._worker: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        # contract counters (read by benchmarks/stats)
+        self.n_submits = 0
+        self.n_stalls = 0      # submit blocked on a full pipeline
+        self.n_overlapped = 0  # submit returned while a save was in flight
 
     @property
     def busy(self) -> bool:
-        return self._thread is not None and self._thread.is_alive()
+        with self._cv:
+            return self._inflight > 0
 
     def wait(self) -> None:
-        """Join the in-flight save (and re-raise its error, if any)."""
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
-        if self._error is not None:
-            err, self._error = self._error, None
-            raise err
+        """Join every in-flight save (and re-raise the first error, if any)."""
+        with self._cv:
+            while self._inflight > 0:
+                self._cv.wait()
+            if self._error is not None:
+                err, self._error = self._error, None
+                raise err
 
     def submit(self, fn: Callable[[], Any]) -> None:
-        """Run `fn` on the podding thread; joins any previous save first."""
-        self.wait()
+        """Enqueue `fn` on the podding thread.  Returns immediately while
+        fewer than `depth` saves are in flight; otherwise blocks until the
+        oldest save retires (backpressure, counted in `n_stalls`).
 
-        def run() -> None:
+        A previously failed save surfaces here (as it did when submit
+        joined the prior thread): the pending error is re-raised and `fn`
+        is NOT enqueued, so a loop that only ever calls save() cannot run
+        forever on silently missing checkpoints."""
+        with self._cv:
+            if self._error is not None:
+                err, self._error = self._error, None
+                raise err
+            self.n_submits += 1
+            if self._inflight > 0:
+                self.n_overlapped += 1
+            if self._inflight >= self.depth:
+                self.n_stalls += 1
+                while self._inflight >= self.depth:
+                    self._cv.wait()
+            self._queue.append(fn)
+            self._inflight += 1
+            if self._worker is None:
+                self._worker = threading.Thread(
+                    target=self._run, name="chipmink-podding", daemon=True)
+                self._worker.start()
+            self._cv.notify_all()
+
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                if not self._queue:
+                    # idle: retire the worker; the next submit restarts it.
+                    self._worker = None
+                    self._cv.notify_all()
+                    return
+                fn = self._queue.popleft()
             try:
                 with self.l_active:
                     fn()
             except BaseException as e:  # surfaced on next wait()
-                self._error = e
-
-        self._thread = threading.Thread(target=run, name="chipmink-podding",
-                                        daemon=True)
-        self._thread.start()
+                with self._cv:
+                    if self._error is None:
+                        self._error = e
+            finally:
+                with self._cv:
+                    self._inflight -= 1
+                    self._cv.notify_all()
 
     def can_access(self, var_is_active: bool, static_execution: bool) -> bool:
         """Paper §6 access rule: during an in-flight save, an execution may

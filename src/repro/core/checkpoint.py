@@ -9,9 +9,38 @@ digests → thesaurus lookup (synonyms) → write dirty pods + manifest.
 A load reverses it: manifest → resolve pods (synonyms are content-addressed)
 → unpod only what the requested names reach (partial loading).
 
+Incremental save pipeline (contract)
+------------------------------------
+With ``incremental=True`` (default) the host-side half of a save scales
+with the *delta*, mirroring the device half's batched digest engine:
+
+  * **Stable node ids** — `GraphCache` re-walks only changed subtrees and
+    splices reused nodes; a key whose node survives keeps its id, so the
+    previous `PodAssignment` (keyed by node id) stays addressable.
+  * **Memo-local preservation** — when the build reports zero structural
+    changes, the previous assignment (pods, locals, pages, edges) is
+    reused verbatim: every untouched pod keeps its memo locals bit-exact,
+    and only pods containing dirty chunks or changed scalars re-hash
+    their structural digest.  Any structural change falls back to the
+    full LGA walk, which — thanks to per-key decision memoization (§7.3)
+    — is itself the parity oracle: from-scratch and incremental saves
+    produce bit-identical pod bytes and manifests (modulo the timing
+    stats block).
+  * **Snapshot-before-overlap** — `save()` builds the graph (and thereby
+    captures host scalar values and device array references) on the
+    *caller's* thread before the body is enqueued.  jax.Arrays are
+    immutable, so those references are the snapshot; host-mutable numpy
+    leaves must not be mutated in place until `wait()` returns (same
+    rule as the paper's l_active discipline).  With that snapshot taken,
+    the async saver (depth 2) no longer joins the previous save: save
+    N's decide/gather/write overlaps step N+1's compute, and save bodies
+    retire strictly FIFO so cross-save state (digest table, previous
+    assignment, thesaurus) is race-free.  Thesaurus/store mutation is
+    additionally serialized under the namespace lock ``l_ns``.
+
 Ablation switches (`enable_cd`, `enable_avf`, `async_mode`) exist to
 reproduce the paper's §8.8/§8.9 baselines (NoCD/AVF, OnlyCD, OnlyAVF,
-Sync).
+Sync); `incremental=False` restores the from-scratch host path.
 """
 from __future__ import annotations
 
@@ -25,6 +54,7 @@ from .active_filter import ActiveVariableFilter
 from .async_saver import AsyncSaver
 from .change_detector import ChangeDetector
 from .graph import ObjectGraph, build_graph, rebuild_tree
+from .graph_cache import GraphCache, IncrementalBuildInfo
 from .lga import LGA, PoddingPolicy
 from .memo import GlobalMemoSpace
 from .podding import (PodAssignment, Unpodder, batched_chunk_fetch,
@@ -49,6 +79,8 @@ class Chipmink:
         enable_cd: bool = True,
         enable_avf: bool = True,
         async_mode: bool = False,
+        async_depth: int = 2,
+        incremental: bool = True,
         track_flips: bool = True,
         seed: int = 0,
     ) -> None:
@@ -59,15 +91,19 @@ class Chipmink:
         self.enable_cd = enable_cd
         self.enable_avf = enable_avf
         self.async_mode = async_mode
+        self.incremental = incremental
         self.detector = ChangeDetector(chunk_bytes=chunk_bytes, seed=seed,
                                        use_kernel=use_kernel)
         self.thesaurus = PodThesaurus(capacity_bytes=thesaurus_capacity)
         self.tracker = FlipTracker() if track_flips else None
         self.avf = ActiveVariableFilter()
-        self.saver = AsyncSaver()
+        self.saver = AsyncSaver(depth=async_depth)
+        self._graph_cache = (GraphCache(chunk_bytes=chunk_bytes)
+                             if incremental else None)
         self._next_time: TimeID = 1
         self._prev_pods: Optional[PodAssignment] = None
         self._prev_graph: Optional[ObjectGraph] = None
+        self._pod_digests: Dict[int, bytes] = {}   # prev save's pod digests
         self.save_stats: List[Dict[str, Any]] = []
 
     # ------------------------------------------------------------------
@@ -85,16 +121,39 @@ class Chipmink:
         time_id = self._next_time
         self._next_time += 1
 
+        # graph build runs on the caller's thread: it is the snapshot that
+        # makes overlapped async saves sound (scalar values are copied into
+        # SCALAR nodes; device array references are immutable).
         t0 = _time.perf_counter()
-        graph = build_graph(state, chunk_bytes=self.chunk_bytes)
+        if self._graph_cache is not None:
+            graph, ginfo = self._graph_cache.build(state)
+        else:
+            graph = build_graph(state, chunk_bytes=self.chunk_bytes)
+            ginfo = None
         t_graph = _time.perf_counter() - t0
 
         def work() -> None:
-            self._save_body(time_id, graph, accessed_vars, touched_prefixes,
-                            readonly_paths, parent, t_graph)
+            self._save_body(time_id, graph, ginfo, accessed_vars,
+                            touched_prefixes, readonly_paths, parent, t_graph)
 
         if self.async_mode:
-            self.saver.submit(work)   # joins any previous save first (§6.1)
+            try:
+                # overlapped; FIFO on the podding thread.  May re-raise a
+                # PREVIOUS save's failure, in which case THIS save is
+                # dropped (its body never enqueued).
+                self.saver.submit(work)
+            except BaseException:
+                # The graph cache already advanced for the dropped save, so
+                # a later identical state would diff as "unchanged" against
+                # a build that never persisted.  Invalidating the cache
+                # forces the next save to rebuild (and therefore re-pod and
+                # re-hash) from scratch; this is the only race-free reset —
+                # queued bodies still in flight may re-arm _prev_pods /
+                # _pod_digests after the fact, but a from-scratch build
+                # never consults them.
+                if self._graph_cache is not None:
+                    self._graph_cache.invalidate()
+                raise
         else:
             work()
         return time_id
@@ -102,9 +161,30 @@ class Chipmink:
     def wait(self) -> None:
         self.saver.wait()
 
-    def _save_body(self, time_id, graph, accessed_vars, touched_prefixes,
-                   readonly_paths, parent, t_graph) -> None:
+    def _save_body(self, time_id, graph, ginfo, accessed_vars,
+                   touched_prefixes, readonly_paths, parent, t_graph) -> None:
+        try:
+            self._save_body_inner(time_id, graph, ginfo, accessed_vars,
+                                  touched_prefixes, readonly_paths, parent,
+                                  t_graph)
+        except BaseException:
+            # A half-applied save poisons the reuse chain: the graph cache
+            # has already advanced (build happens at save() call time), so
+            # the next save must re-pod and re-hash from its own graph
+            # rather than trust artifacts of a save that never finished.
+            self._prev_pods = None
+            self._prev_graph = None
+            self._pod_digests = {}
+            raise
+
+    def _save_body_inner(self, time_id, graph, ginfo, accessed_vars,
+                         touched_prefixes, readonly_paths, parent,
+                         t_graph) -> None:
         stats: Dict[str, Any] = {"time_id": time_id, "t_graph": t_graph}
+        if ginfo is not None:
+            stats["t_graph_inc"] = t_graph
+            stats["n_nodes_reused"] = ginfo.n_nodes_reused
+            stats["n_nodes_rebuilt"] = ginfo.n_nodes_rebuilt
         t0 = _time.perf_counter()
         if self.enable_avf:
             active = self.avf.active_leaves(
@@ -133,32 +213,73 @@ class Chipmink:
                              if "/".join(n.path) in active]
             self.tracker.observe(graph, report.dirty, active_chunks)
 
+        # podding: reuse the previous assignment verbatim when the graph
+        # structure is unchanged (memo locals preserved, §7.3 stability);
+        # otherwise rerun the full LGA walk — the parity oracle — with the
+        # rebuilt-key set so feature preparation stays incremental.
         t0 = _time.perf_counter()
-        asg = pod_graph(graph, self.policy,
-                        flip_ema=self.tracker.ema if self.tracker else None,
-                        memo_page_size=self.memo_page_size)
+        pods_reused = (self.incremental and ginfo is not None
+                       and not ginfo.from_scratch
+                       and not ginfo.structural_change
+                       and self._prev_pods is not None)
+        if pods_reused:
+            asg = self._prev_pods
+            stats["n_pods_reused"] = len(asg.pods)
+        else:
+            asg = pod_graph(graph, self.policy,
+                            flip_ema=self.tracker.ema if self.tracker else None,
+                            memo_page_size=self.memo_page_size,
+                            changed_keys=(ginfo.rebuilt_keys
+                                          if ginfo is not None else None))
+            stats["n_pods_reused"] = 0
         stats["n_pods"] = len(asg.pods)
         stats["t_podding"] = _time.perf_counter() - t0
 
         # decide phase: structural digests + synonym lookups; no payload
-        # bytes move yet.
+        # bytes move yet.  With a reused assignment, only pods touched by
+        # dirty chunks or changed scalar values re-hash their digest; the
+        # rest reuse the previous save's digest (bit-identical: the digest
+        # is a pure function of unchanged inputs).
         t0 = _time.perf_counter()
+        touched_pods = None
+        if pods_reused and self._pod_digests:
+            touched_pods = set()
+            for key in report.dirty:
+                nid = graph.by_key.get(key)
+                if nid is not None:
+                    touched_pods.add(asg.node_pod[nid])
+            for key in (ginfo.scalar_changed_keys if ginfo else ()):
+                nid = graph.by_key.get(key)
+                if nid is not None:
+                    touched_pods.add(asg.node_pod[nid])
         pods_meta: Dict[int, Dict[str, Any]] = {}
-        written = aliased = 0
+        written = aliased = digests_reused = 0
         bytes_before = self.store.total_bytes()
+        new_digests: Dict[int, bytes] = {}
         to_write: List[tuple] = []        # (pod, dig_hex or None, digest)
         for pid, pod in asg.pods.items():
-            digest = pod_structural_digest(pod, graph, asg, report.digests)
+            if touched_pods is not None and pid not in touched_pods \
+                    and pid in self._pod_digests:
+                digest = self._pod_digests[pid]
+                digests_reused += 1
+            else:
+                digest = pod_structural_digest(pod, graph, asg,
+                                               report.digests)
+            new_digests[pid] = digest
             dig_hex = digest.hex()
             skip = False
             if self.enable_cd:
-                ref = self.thesaurus.lookup(digest)
+                # only the thesaurus probe touches shared namespace state;
+                # hashing above runs lock-free so concurrent loads are not
+                # blocked for the duration of the decide phase.
+                with self.saver.l_ns:
+                    ref = self.thesaurus.lookup(digest)
                 if ref is not None:
                     skip = True           # synonymous pod (§4.2)
             if not skip:
                 if not self.enable_cd:
-                    # NoCD baseline: every save writes unconditionally under
-                    # a unique key (true snapshot cost, no dedup).
+                    # NoCD baseline: every save writes unconditionally
+                    # under a unique key (true snapshot cost, no dedup).
                     h = hashlib.blake2b(digest, digest_size=16,
                                         person=b"nocd")
                     h.update(time_id.to_bytes(8, "little"))
@@ -168,9 +289,12 @@ class Chipmink:
                 aliased += 1
             pods_meta[pid] = {
                 "d": dig_hex,
-                "pages": asg.memo.pods[pid].pages if pid in asg.memo.pods else [],
+                "pages": (asg.memo.pods[pid].pages
+                          if pid in asg.memo.pods else []),
                 "n": len(pod.node_ids),
             }
+        self._pod_digests = new_digests
+        stats["n_pod_digests_reused"] = digests_reused
         stats["t_decide"] = _time.perf_counter() - t0
 
         # gather phase: ONE batched device fetch for every chunk of every
@@ -183,18 +307,22 @@ class Chipmink:
         stats["n_gather_syncs"] = gather_syncs
 
         # write phase: serialize + store from the prefetched host bytes.
+        # Thesaurus/store mutation is serialized under the namespace lock,
+        # taken per pod so serialization itself never blocks concurrent
+        # readers (save bodies are FIFO already; l_ns shields readers).
         t0 = _time.perf_counter()
         for pod, dig_hex, digest in to_write:
             data = serialize_pod(pod, graph, asg, chunk_bytes_of)
-            if self.enable_cd:
-                if self.store.put_pod(dig_hex, data):
-                    written += 1
+            with self.saver.l_ns:
+                if self.enable_cd:
+                    if self.store.put_pod(dig_hex, data):
+                        written += 1
+                    else:
+                        aliased += 1          # disk-level synonym
+                    self.thesaurus.insert(digest, dig_hex)
                 else:
-                    aliased += 1          # disk-level synonym
-                self.thesaurus.insert(digest, dig_hex)
-            else:
-                self.store.put_pod(dig_hex, data)
-                written += 1
+                    self.store.put_pod(dig_hex, data)
+                    written += 1
         stats["t_write"] = _time.perf_counter() - t0
         stats["pods_written"] = written
         stats["pods_aliased"] = aliased
@@ -209,7 +337,8 @@ class Chipmink:
             "stats": {k: v for k, v in stats.items()
                       if isinstance(v, (int, float, str))},
         }
-        self.store.put_manifest(time_id, manifest)
+        with self.saver.l_ns:
+            self.store.put_manifest(time_id, manifest)
         self._prev_pods = asg
         self._prev_graph = graph
         self.save_stats.append(stats)
@@ -218,12 +347,18 @@ class Chipmink:
     # load
     # ------------------------------------------------------------------
     def _open(self, time_id: Optional[TimeID]) -> tuple:
-        if time_id is None:
-            tids = self.store.list_time_ids()
-            if not tids:
-                raise FileNotFoundError("no checkpoints in store")
-            time_id = tids[-1]
-        manifest = self.store.get_manifest(time_id)
+        # Manifest resolution takes the namespace lock: an overlapped save
+        # body may be inserting manifests concurrently.  Pod fetches after
+        # this stay lock-free — pods are content-addressed, internally
+        # locked, and fully written before their manifest lands (the
+        # manifest put is the l_ns-serialized commit point).
+        with self.saver.l_ns:
+            if time_id is None:
+                tids = self.store.list_time_ids()
+                if not tids:
+                    raise FileNotFoundError("no checkpoints in store")
+                time_id = tids[-1]
+            manifest = self.store.get_manifest(time_id)
         pages = {int(pid): meta["pages"]
                  for pid, meta in manifest["pods"].items()}
         memo = GlobalMemoSpace.from_page_tables(
@@ -259,7 +394,12 @@ class Chipmink:
 
 def reflow(like: Any, loaded: Dict[str, Any]) -> Any:
     """Re-flow loaded values into the structure of `like` (so custom pytree
-    containers survive a round-trip)."""
+    containers survive a round-trip).
+
+    Tuples are rebuilt positionally; namedtuple-style containers (anything
+    exposing `_fields`) are reconstructed with positional-star args, since
+    their constructors take fields, not an iterable.
+    """
     def walk(template: Any, value: Any) -> Any:
         if isinstance(template, dict):
             return {k: walk(template[k], value[k]) for k in template}
@@ -267,6 +407,8 @@ def reflow(like: Any, loaded: Dict[str, Any]) -> Any:
             t = type(template)
             vals = [walk(t_i, value[str(i)] if isinstance(value, dict) else value[i])
                     for i, t_i in enumerate(template)]
+            if hasattr(template, "_fields"):   # namedtuple-style
+                return t(*vals)
             return t(vals)
         return value
 

@@ -20,6 +20,7 @@ record the canonical path.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
@@ -105,8 +106,13 @@ def chunk_grid(shape: Tuple[int, ...], dtype: np.dtype, target_bytes: int) -> Tu
 def _flatten_with_paths(tree: Any) -> List[Tuple[Path, Any]]:
     """Flatten a pytree into (path, leaf) pairs with deterministic ordering.
 
-    Uses jax's path flattening when available; otherwise walks
-    dict/list/tuple containers directly so pure-numpy state also works.
+    The walk — not jax's path flattening — is the contract: `dict` children
+    are visited in insertion order under their `str(key)`, `list`/`tuple`
+    children (including namedtuple-style tuples) under their stringified
+    index, and everything else (arrays, scalars, None) is a leaf.  Custom
+    pytree registrations are deliberately ignored so pure-numpy state and
+    jax state flatten identically; `Chipmink.load(like=...)` re-flows
+    values back into custom containers (see `reflow`).
     """
     out: List[Tuple[Path, Any]] = []
 
@@ -124,6 +130,33 @@ def _flatten_with_paths(tree: Any) -> List[Tuple[Path, Any]]:
     return out
 
 
+def build_leaf_nodes(path: Path, leaf: Any, chunk_bytes: int,
+                     new_node: Callable[..., Node]) -> Node:
+    """Construct an array leaf's LEAF node and its CHUNK children through
+    the caller-supplied `new_node` allocator.
+
+    Single source of truth for the chunk-grid and size math shared by
+    `build_graph` and the incremental `GraphCache` walker — their outputs
+    must stay structurally bit-identical, so neither re-implements this.
+    """
+    shape = tuple(int(d) for d in leaf.shape)
+    np_dtype = np.dtype(leaf.dtype)
+    dtype = str(np_dtype)
+    elems, n_chunks = chunk_grid(shape, np_dtype, chunk_bytes)
+    lnode = new_node(path=path, kind=LEAF, size=STRUCT_SIZE,
+                     shape=shape, dtype=dtype, chunk_rows=elems)
+    itemsize = np_dtype.itemsize
+    total_elems = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    for ci in range(n_chunks):
+        lo = ci * elems
+        hi = min(total_elems, (ci + 1) * elems)
+        cnode = new_node(path=path, kind=CHUNK,
+                         size=max((hi - lo) * itemsize, 1), shape=shape,
+                         dtype=dtype, chunk_rows=elems, chunk_index=ci)
+        lnode.children.append(cnode.node_id)
+    return lnode
+
+
 @dataclasses.dataclass
 class ObjectGraph:
     """G = (U, E, V, l): nodes, edges (via children lists), variables."""
@@ -134,6 +167,13 @@ class ObjectGraph:
     variables: Dict[str, int]       # l: variable name -> node id (top-level)
     #: leaf path -> the live array (not serialized; used by podding/CD)
     arrays: Dict[str, Any]
+    #: lazily built sorted view of by_key for bisect prefix queries
+    _sorted_keys: Optional[List[str]] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    #: lazily built sorted LEAF-only key list (prefix queries that want
+    #: leaves must not pay for the chunk keys, which dominate by count)
+    _sorted_leaf_keys: Optional[List[str]] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def node(self, node_id: int) -> Node:
         return self.nodes[node_id]
@@ -163,13 +203,39 @@ class ObjectGraph:
     def total_payload_bytes(self) -> int:
         return sum(n.size for n in self.nodes.values() if n.kind == CHUNK)
 
+    def sorted_keys(self) -> List[str]:
+        """Sorted key list (cached; the graph is immutable after build)."""
+        if self._sorted_keys is None:
+            self._sorted_keys = sorted(self.by_key)
+        return self._sorted_keys
+
+    def sorted_leaf_keys(self) -> List[str]:
+        """Sorted LEAF keys only (cached), for leaf-prefix range scans."""
+        if self._sorted_leaf_keys is None:
+            self._sorted_leaf_keys = sorted(
+                k for k, nid in self.by_key.items()
+                if self.nodes[nid].kind == LEAF)
+        return self._sorted_leaf_keys
+
     def subtree_keys(self, prefix: Path) -> List[str]:
-        """All node keys under a path prefix (for the active-variable filter)."""
+        """All node keys under a path prefix (for the active-variable filter).
+
+        Answered with three bisect range scans over the sorted key list —
+        the exact match, the chunk range ``p#…``, and the descendant range
+        ``p/…`` — so a query costs O(log N + matches) instead of a full
+        O(N) key scan per prefix.
+        """
         p = path_str(prefix)
-        return [
-            k for k in self.by_key
-            if k == p or k.startswith(p + "/") or k.startswith(p + "#")
-        ]
+        ks = self.sorted_keys()
+        out: List[str] = []
+        i = bisect.bisect_left(ks, p)
+        if i < len(ks) and ks[i] == p:
+            out.append(p)
+        for sep in ("#", "/"):
+            lo = bisect.bisect_left(ks, p + sep)
+            hi = bisect.bisect_left(ks, p + chr(ord(sep) + 1))
+            out.extend(ks[lo:hi])
+        return out
 
 
 def build_graph(state: Any, *, chunk_bytes: int = 1 << 22) -> ObjectGraph:
@@ -224,25 +290,9 @@ def build_graph(state: Any, *, chunk_bytes: int = 1 << 22) -> ObjectGraph:
                 parent.children.append(node.node_id)
                 continue
             seen_objects[oid] = path
-            shape = tuple(int(d) for d in leaf.shape)
-            dtype = str(np.dtype(leaf.dtype))
-            elems, n_chunks = chunk_grid(shape, np.dtype(leaf.dtype), chunk_bytes)
-            lnode = new_node(
-                path=path, kind=LEAF, size=STRUCT_SIZE,
-                shape=shape, dtype=dtype, chunk_rows=elems,
-            )
+            lnode = build_leaf_nodes(path, leaf, chunk_bytes, new_node)
             parent.children.append(lnode.node_id)
             arrays[path_str(path)] = leaf
-            itemsize = np.dtype(leaf.dtype).itemsize
-            total_elems = int(np.prod(shape, dtype=np.int64)) if shape else 1
-            for ci in range(n_chunks):
-                lo = ci * elems
-                hi = min(total_elems, (ci + 1) * elems)
-                cnode = new_node(
-                    path=path, kind=CHUNK, size=max((hi - lo) * itemsize, 1),
-                    shape=shape, dtype=dtype, chunk_rows=elems, chunk_index=ci,
-                )
-                lnode.children.append(cnode.node_id)
         else:
             # python scalar (int/float/bool/str/bytes) — host state like step
             # counters and data-pipeline cursors.

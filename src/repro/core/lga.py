@@ -17,13 +17,13 @@ ConstantVolatility.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Optional, Set
 
 import numpy as np
 
 from .graph import ALIAS, CHUNK, CONTAINER, LEAF, SCALAR, Node, ObjectGraph
-from .volatility import (ConstantVolatility, PriorVolatility, VolatilityModel,
-                         graph_features)
+from .volatility import (N_FEATURES, ConstantVolatility, PriorVolatility,
+                         VolatilityModel, static_node_features)
 
 BUNDLE = "bundle"
 SPLIT_CONTINUE = "split-continue"
@@ -51,8 +51,13 @@ class PoddingPolicy:
     name = "base"
 
     def prepare(self, graph: ObjectGraph,
-                flip_ema: Optional[Dict[str, float]] = None) -> None:
-        """Called once per podding pass; precompute per-node λ etc."""
+                flip_ema: Optional[Dict[str, float]] = None,
+                changed_keys: Optional[Set[str]] = None) -> None:
+        """Called once per podding pass; precompute per-node λ etc.
+
+        `changed_keys` (incremental graph builds only) names the keys whose
+        nodes were rebuilt since the previous save; policies may trust
+        per-key caches for everything else."""
 
     def lam(self, node: Node) -> float:
         return 0.0
@@ -74,14 +79,48 @@ class LGA(PoddingPolicy):
         self.max_pod_depth = int(max_pod_depth)
         self._lam: Dict[str, float] = {}
         self._memo: Dict[str, str] = {}   # node key -> action (§7.3 stability)
+        self._feat_static: Dict[str, np.ndarray] = {}  # key -> features 0–8
 
     def prepare(self, graph: ObjectGraph,
-                flip_ema: Optional[Dict[str, float]] = None) -> None:
-        feats = graph_features(graph, flip_ema)
-        keys = list(feats.keys())
-        X = np.stack([feats[k] for k in keys])
+                flip_ema: Optional[Dict[str, float]] = None,
+                changed_keys: Optional[Set[str]] = None) -> None:
+        """Per-node λ for this save.
+
+        The static feature rows (0–8) are cached per key across saves;
+        when `changed_keys` is provided (incremental graph build) only the
+        rebuilt keys recompute their row — the Python-loop feature
+        extraction is the dominant podding-prep cost on big graphs.  The
+        EMA column and the model prediction always rerun (vectorized)
+        because mutation history moves every save.
+        """
+        cache = self._feat_static
+        trust_cache = changed_keys is not None
+        keys = []
+        rows = []
+        for n in graph.nodes.values():
+            k = n.key
+            row = None
+            if trust_cache and k not in changed_keys:
+                row = cache.get(k)
+            if row is None:
+                row = static_node_features(n)
+                cache[k] = row
+            keys.append(k)
+            rows.append(row)
+        X = (np.stack(rows) if rows
+             else np.zeros((0, N_FEATURES), dtype=np.float64))
+        if flip_ema is not None:
+            X[:, 9] = np.fromiter((flip_ema.get(k, 0.5) for k in keys),
+                                  dtype=np.float64, count=len(keys))
+        else:
+            X[:, 9] = 0.5
         lam = self.volatility.predict(X)
         self._lam = {k: float(l) for k, l in zip(keys, lam)}
+        if len(cache) > 2 * len(keys) + 64:   # bound growth over dead keys
+            live = set(keys)
+            for k in list(cache):
+                if k not in live:
+                    del cache[k]
 
     def lam(self, node: Node) -> float:
         return self._lam.get(node.key, 0.5)

@@ -10,6 +10,14 @@ be recovered by Eq. (1):
     m_global(m_virtual) = δ_i + r           if m_virtual <  2^31
                         = m_virtual - 2^31  if m_virtual >= 2^31
     where i = m_virtual // B and r = m_virtual % B.
+
+Memo-local preservation: locals are handed out in pod admit order and
+pages in global allocation order, both pure functions of the graph
+structure and the (memoized) podding decisions.  The incremental save
+path therefore reuses the entire GlobalMemoSpace of the previous save
+whenever the graph structure is unchanged — untouched pods keep their
+locals and page offsets bit-for-bit, which is what keeps synonym digests
+stable across delta saves.
 """
 from __future__ import annotations
 

@@ -62,9 +62,32 @@ class PodAssignment:
 
 def pod_graph(graph: ObjectGraph, policy: PoddingPolicy,
               flip_ema: Optional[Dict[str, float]] = None,
-              memo_page_size: int = 1024) -> PodAssignment:
-    """Run podding over the graph with the given policy."""
-    policy.prepare(graph, flip_ema)
+              memo_page_size: int = 1024,
+              changed_keys: Optional[Set[str]] = None) -> PodAssignment:
+    """Run podding over the graph with the given policy.
+
+    Delta re-podding (§7.3 in practice): because policies memoize their
+    decision per node *key*, a walk over a structurally unchanged graph
+    reproduces the previous assignment exactly — same pods, same admit
+    order, same memo locals, same pages.  `Chipmink` exploits this by
+    reusing the previous `PodAssignment` verbatim when the incremental
+    graph build reports zero structural changes (every memo local is
+    preserved without re-walking anything).  When structure *did* change,
+    the full walk reruns here, but `changed_keys` (the rebuilt node keys
+    from the incremental build) lets the policy trust its per-key feature
+    caches for the untouched remainder — the walk stays the parity oracle
+    either way.
+    """
+    if changed_keys is None:
+        policy.prepare(graph, flip_ema)
+    else:
+        try:
+            policy.prepare(graph, flip_ema, changed_keys=changed_keys)
+        except TypeError as e:
+            if "changed_keys" not in str(e):
+                raise
+            # legacy policy with the pre-incremental two-arg signature
+            policy.prepare(graph, flip_ema)
     memo = GlobalMemoSpace(page_size=memo_page_size)
     pods: Dict[int, Pod] = {}
     node_pod: Dict[int, int] = {}

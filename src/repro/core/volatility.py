@@ -39,8 +39,13 @@ _LAYER_RE = re.compile(r"(?:^|[_/])(?:layers?|blocks?|h)[_/]?(\d+)")
 _DIGIT_RE = re.compile(r"/(\d+)(?:/|$)")
 
 
-def node_features(node: Node, graph: ObjectGraph,
-                  flip_ema: Optional[Dict[str, float]] = None) -> np.ndarray:
+def static_node_features(node: Node) -> np.ndarray:
+    """Features 0–8: pure functions of the node itself (no history).
+
+    Cached per node key by `LGA.prepare` across saves — a reused node
+    (same key, unchanged shape/size/children) has bit-identical static
+    features, so only the EMA column (feature 9) needs refreshing.
+    """
     f = np.zeros((N_FEATURES,), dtype=np.float64)
     f[0] = np.log2(node.size + 1.0)
     f[1] = float(len(node.path))
@@ -63,10 +68,13 @@ def node_features(node: Node, graph: ObjectGraph,
     m = _LAYER_RE.search(p) or _DIGIT_RE.search(p)
     if m:
         f[8] = min(1.0, int(m.group(1)) / 128.0)
-    if flip_ema is not None:
-        f[9] = flip_ema.get(node.key, 0.5)
-    else:
-        f[9] = 0.5
+    return f
+
+
+def node_features(node: Node, graph: ObjectGraph,
+                  flip_ema: Optional[Dict[str, float]] = None) -> np.ndarray:
+    f = static_node_features(node)
+    f[9] = flip_ema.get(node.key, 0.5) if flip_ema is not None else 0.5
     return f
 
 

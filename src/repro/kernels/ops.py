@@ -28,6 +28,15 @@ runs the batched engine in `batch.py`.  Layout and contract:
     chunk payloads move in one batched `jax.device_get`
     (`core.podding.batched_chunk_fetch`), so a full save costs 1 digest
     fetch + ≤ 1 payload gather.
+  * Incremental host half (see `core.checkpoint`): the digest keys this
+    engine emits are *chunk keys*, which the incremental pipeline relies
+    on being stable — `GraphCache` keeps node ids and keys fixed for
+    unchanged subtrees, so the persistent digest table, the reused
+    `PodAssignment` (memo locals preserved), and the pod-digest cache
+    all index the same rows across saves.  Overlapped async saves are
+    sound because the graph built at `save()` call time snapshots device
+    array references (immutable) and host scalars before the device
+    digest/gather work is enqueued behind the previous save.
 """
 from __future__ import annotations
 

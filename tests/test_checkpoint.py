@@ -170,6 +170,24 @@ def test_thesaurus_capacity_zero_degrades_gracefully():
     assert ck.save_stats[-1]["pods_aliased"] > 0
 
 
+def test_reflow_namedtuple_roundtrip():
+    """`load(like=...)` must reconstruct namedtuple-style containers
+    (their constructors take fields, not an iterable)."""
+    from collections import namedtuple
+    Pair = namedtuple("Pair", ["w", "b"])
+    rng = np.random.default_rng(12)
+    state = {"layer": Pair(rng.standard_normal((8, 4)).astype(np.float32),
+                           rng.standard_normal(4).astype(np.float32)),
+             "step": 3}
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 10)
+    t = ck.save(state)
+    loaded = ck.load(time_id=t, like=state)
+    assert isinstance(loaded["layer"], Pair)
+    assert np.array_equal(loaded["layer"].w, state["layer"].w)
+    assert np.array_equal(loaded["layer"].b, state["layer"].b)
+    assert loaded["step"] == 3
+
+
 @given(chunk=sampled_from([256, 1024, 4096, 1 << 20]),
        rows=integers(1, 500))
 def test_roundtrip_any_chunking(chunk, rows):

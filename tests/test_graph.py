@@ -65,3 +65,37 @@ def test_chunk_slice_covers_array():
 def test_rebuild_tree():
     flat = {"a/b/c": 1, "a/d": 2, "e": 3}
     assert rebuild_tree(flat) == {"a": {"b": {"c": 1}, "d": 2}, "e": 3}
+
+
+def _naive_subtree_keys(g, prefix):
+    from repro.core.graph import path_str
+    p = path_str(prefix)
+    return sorted(k for k in g.by_key
+                  if k == p or k.startswith(p + "/") or k.startswith(p + "#"))
+
+
+def test_subtree_keys_bisect_matches_naive():
+    """Bisect range scans must match the O(N) filter — including the
+    sibling-prefix trap ('params/w' vs 'params/w.bias' vs 'params/wx')."""
+    state = {"params": {"w": np.zeros((64, 8), np.float32),
+                        "w.bias": np.ones(4, np.float32),
+                        "wx": np.ones(4, np.float32),
+                        "deep": {"a": np.ones(4, np.float32)}},
+             "step": 1}
+    g = build_graph(state, chunk_bytes=256)
+    for prefix in ((), ("params",), ("params", "w"), ("params", "w.bias"),
+                   ("params", "wx"), ("params", "deep"), ("step",),
+                   ("params", "missing")):
+        assert sorted(g.subtree_keys(prefix)) == _naive_subtree_keys(g, prefix)
+    # chunk keys of the big leaf are reachable under its prefix
+    assert any("#[" in k for k in g.subtree_keys(("params", "w")))
+
+
+def test_flatten_namedtuple_containers():
+    """Namedtuple-style tuples walk positionally (the documented contract)."""
+    from collections import namedtuple
+    from repro.core.graph import _flatten_with_paths
+    Point = namedtuple("Point", ["x", "y"])
+    flat = _flatten_with_paths({"p": Point(np.ones(3), 2)})
+    assert [(p, type(v).__name__) for p, v in flat] == \
+        [(("p", "0"), "ndarray"), (("p", "1"), "int")]

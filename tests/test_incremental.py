@@ -1,0 +1,394 @@
+"""Incremental save pipeline parity + contracts.
+
+The cached graph build, delta re-podding, and pod-digest cache must be
+*invisible* in the persisted artifacts: N randomized mutate-then-save
+rounds produce bit-identical manifests (modulo the timing stats block),
+bit-identical pod bytes, and equal `load()` results for cached-vs-from-
+scratch builds.  The double-buffered AsyncSaver must overlap without
+joining the previous save and count stalls only under real backpressure.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Chipmink, GraphCache, MemoryStore, build_graph
+from repro.core.async_saver import AsyncSaver
+from repro.core.graph import CHUNK, CONTAINER, LEAF, SCALAR
+
+from proptest import given, integers
+
+
+def _strip(manifest):
+    """Manifest minus the stats block (timings/reuse counters differ by
+    construction between the incremental and the oracle instance)."""
+    return {k: v for k, v in manifest.items() if k != "stats"}
+
+
+def _base_state(rng):
+    state = {
+        "params": {"emb": rng.standard_normal((512, 16)).astype(np.float32),
+                   "w": rng.standard_normal((32, 32)).astype(np.float32),
+                   "nested": {"a": rng.standard_normal(64).astype(np.float32)}},
+        "opt": {"mu": np.zeros((512, 16), np.float32)},
+        "step": 0,
+    }
+    state["params"]["tied"] = state["params"]["emb"]
+    return state
+
+
+def _mutate(state, rng, round_no):
+    """One randomized mutate step; returns a tag for failure reporting."""
+    choice = int(rng.integers(0, 7))
+    if choice == 0:
+        return "none"
+    if choice == 1:                      # in-place value mutation
+        idx = rng.integers(0, state["params"]["emb"].shape[0], size=4)
+        state["params"]["emb"][idx] += 1e-2
+        state["opt"]["mu"][idx] = 0.5
+        return "values"
+    if choice == 2:                      # host scalar change
+        state["step"] = round_no
+        return "scalar"
+    if choice == 3:                      # structural: add a leaf
+        state["params"][f"x{round_no}"] = rng.standard_normal(
+            (16, 4)).astype(np.float32)
+        return "add-leaf"
+    if choice == 4:                      # structural: remove an added leaf
+        for k in list(state["params"]):
+            if k.startswith("x"):
+                del state["params"][k]
+                return "del-leaf"
+        return "del-noop"
+    if choice == 5:                      # structural: reshape a leaf
+        r = 24 + round_no
+        state["params"]["w"] = rng.standard_normal((r, 32)).astype(np.float32)
+        return "reshape"
+    # structural: break / restore the shared reference
+    if state["params"]["tied"] is state["params"]["emb"]:
+        state["params"]["tied"] = state["params"]["emb"].copy()
+        return "untie"
+    state["params"]["tied"] = state["params"]["emb"]
+    return "retie"
+
+
+def _tree_equal(a, b):
+    if isinstance(a, dict) or isinstance(b, dict):
+        return (isinstance(a, dict) and isinstance(b, dict)
+                and a.keys() == b.keys()
+                and all(_tree_equal(a[k], b[k]) for k in a))
+    if hasattr(a, "shape") or hasattr(b, "shape"):
+        return (np.asarray(a).dtype == np.asarray(b).dtype
+                and np.array_equal(np.asarray(a), np.asarray(b)))
+    return a == b
+
+
+@given(seed=integers(0, 2 ** 31 - 1))
+def test_incremental_parity_property(seed):
+    """Randomized mutate-then-save rounds: the incremental pipeline and
+    the from-scratch oracle must persist identical artifacts."""
+    rng = np.random.default_rng(seed)
+    state = _base_state(rng)
+    inc = Chipmink(MemoryStore(), chunk_bytes=1 << 10, incremental=True)
+    ref = Chipmink(MemoryStore(), chunk_bytes=1 << 10, incremental=False)
+    for rnd in range(1, 6):
+        tag = _mutate(state, rng, rnd) if rnd > 1 else "first"
+        ti = inc.save(state)
+        tr = ref.save(state)
+        assert ti == tr
+        mi = inc.store.get_manifest(ti)
+        mr = ref.store.get_manifest(tr)
+        assert _strip(mi) == _strip(mr), (rnd, tag)
+        for meta_i, meta_r in zip(mi["pods"].values(), mr["pods"].values()):
+            assert meta_i["d"] == meta_r["d"], (rnd, tag)
+            assert (inc.store.get_pod(meta_i["d"])
+                    == ref.store.get_pod(meta_r["d"])), (rnd, tag)
+        assert _tree_equal(inc.load(time_id=ti), ref.load(time_id=tr)), \
+            (rnd, tag)
+    # the oracle never reuses; the incremental instance must have at least
+    # once (round 1→2 with a non-structural mutation) — only assert the
+    # counters exist so the property stays mutation-agnostic.
+    assert all("n_pods_reused" in s for s in inc.save_stats)
+    assert all(s["n_pods_reused"] == 0 for s in ref.save_stats)
+
+
+def test_assignment_and_digests_reused_on_value_mutation():
+    rng = np.random.default_rng(0)
+    state = _base_state(rng)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 10)
+    ck.save(state)
+    state["params"]["emb"][3] += 1.0
+    ck.save(state)
+    s = ck.save_stats[-1]
+    assert s["n_pods_reused"] == s["n_pods"] > 0
+    assert s["n_nodes_reused"] > 0
+    assert s["n_pod_digests_reused"] > 0
+    assert s["n_pod_digests_reused"] < s["n_pods"]   # dirty pod re-hashed
+    assert s["pods_written"] >= 1
+
+
+def test_structural_change_falls_back_then_recovers():
+    rng = np.random.default_rng(1)
+    state = _base_state(rng)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 10)
+    ck.save(state)
+    state["params"]["extra"] = rng.standard_normal((8, 8)).astype(np.float32)
+    ck.save(state)
+    assert ck.save_stats[-1]["n_pods_reused"] == 0      # full re-pod
+    assert ck.save_stats[-1]["n_nodes_reused"] > 0      # graph still spliced
+    state["params"]["extra"][0] += 1.0
+    ck.save(state)
+    assert ck.save_stats[-1]["n_pods_reused"] > 0       # reuse resumes
+
+
+def test_scalar_change_is_not_structural_but_dirties_its_pod():
+    rng = np.random.default_rng(2)
+    state = _base_state(rng)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 10)
+    ck.save(state)
+    state["step"] = 7
+    ck.save(state)
+    s = ck.save_stats[-1]
+    assert s["n_pods_reused"] > 0                       # no structural change
+    assert s["pods_written"] >= 1                       # scalar pod rewritten
+    assert ck.load(names={"step"})["step"] == 7
+
+
+def test_graph_cache_node_id_stability():
+    rng = np.random.default_rng(3)
+    state = _base_state(rng)
+    cache = GraphCache(chunk_bytes=1 << 10)
+    g1, i1 = cache.build(state)
+    assert i1.from_scratch and i1.structural_change
+
+    state["params"]["emb"][0] += 1.0      # in-place: no node changes at all
+    state["step"] = 5                      # scalar value change: same id
+    g2, i2 = cache.build(state)
+    assert not i2.structural_change
+    assert i2.scalar_changed_keys == ["step"]
+    assert set(g1.by_key) == set(g2.by_key)
+    for key, nid in g1.by_key.items():
+        assert g2.by_key[key] == nid      # every id stable
+    assert g2.nodes[g2.by_key["step"]].value == 5
+    assert g1.nodes[g1.by_key["step"]].value == 0   # old graph not mutated
+
+    state["params"]["fresh"] = np.ones((4, 4), np.float32)
+    g3, i3 = cache.build(state)
+    assert i3.structural_change
+    for key, nid in g2.by_key.items():    # surviving keys keep their ids
+        assert g3.by_key[key] == nid
+    assert g3.by_key["params/fresh"] not in g2.nodes
+
+
+def test_graph_cache_alias_changes_are_structural():
+    rng = np.random.default_rng(4)
+    state = _base_state(rng)
+    cache = GraphCache(chunk_bytes=1 << 10)
+    cache.build(state)
+    state["params"]["tied"] = state["params"]["emb"].copy()   # untie
+    _, info = cache.build(state)
+    assert info.structural_change
+    state["params"]["tied"] = state["params"]["emb"]          # retie
+    g, info = cache.build(state)
+    assert info.structural_change
+    assert g.nodes[g.by_key["params/tied"]].alias_of == ("params", "emb")
+
+
+def test_incremental_graph_matches_scratch_structure():
+    """The spliced graph is structurally indistinguishable from a fresh
+    build_graph: keys, kinds, shapes, child key order, scalar values."""
+    rng = np.random.default_rng(5)
+    state = _base_state(rng)
+    cache = GraphCache(chunk_bytes=1 << 10)
+    cache.build(state)
+    state["params"]["emb"][1] += 1.0
+    state["params"]["w"] = rng.standard_normal((16, 32)).astype(np.float32)
+    state["step"] = 9
+    g_inc, _ = cache.build(state)
+    g_ref = build_graph(state, chunk_bytes=1 << 10)
+
+    assert set(g_inc.by_key) == set(g_ref.by_key)
+    for key in g_ref.by_key:
+        a = g_inc.nodes[g_inc.by_key[key]]
+        b = g_ref.nodes[g_ref.by_key[key]]
+        assert (a.kind, a.shape, a.dtype, a.chunk_rows, a.chunk_index,
+                a.alias_of, a.size) == \
+               (b.kind, b.shape, b.dtype, b.chunk_rows, b.chunk_index,
+                b.alias_of, b.size), key
+        if a.kind == SCALAR:
+            assert a.value == b.value
+        assert [g_inc.nodes[c].key for c in a.children] == \
+               [g_ref.nodes[c].key for c in b.children], key
+    assert [n.key for n in g_inc.iter_dfs()] == \
+           [n.key for n in g_ref.iter_dfs()]
+    assert g_inc.variables.keys() == g_ref.variables.keys()
+
+
+def test_inplace_mutable_scalar_mutation_is_detected():
+    """A mutable scalar leaf (bytearray cursor) mutated in place must be
+    picked up by the cached build — object identity compares equal to
+    itself, so change detection snapshots value signatures instead."""
+    state = {"w": np.zeros((8, 4), np.float32), "cursor": bytearray(b"aaaa")}
+    inc = Chipmink(MemoryStore(), chunk_bytes=1 << 10, incremental=True)
+    ref = Chipmink(MemoryStore(), chunk_bytes=1 << 10, incremental=False)
+    inc.save(state), ref.save(state)
+    state["cursor"][:] = b"bbbb"                  # in place: same object
+    ti, tr = inc.save(state), ref.save(state)
+    assert inc.save_stats[-1]["n_pods_reused"] > 0   # still non-structural
+    a, b = inc.load(time_id=ti), ref.load(time_id=tr)
+    assert bytes(a["cursor"]) == bytes(b["cursor"]) == b"bbbb"
+
+
+def test_failed_save_body_poisons_reuse_chain():
+    """A save body that dies mid-way must not leave stale reuse state:
+    the next save re-pods from its own graph and still round-trips."""
+    rng = np.random.default_rng(8)
+    state = _base_state(rng)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 10)
+    ck.save(state)
+    orig = ck.store.put_manifest
+    ck.store.put_manifest = lambda *a, **kw: (_ for _ in ()).throw(
+        IOError("disk full"))
+    state["params"]["boom"] = np.ones((8, 2), np.float32)   # structural
+    with pytest.raises(IOError):
+        ck.save(state)
+    ck.store.put_manifest = orig
+    del state["params"]["boom"]            # back to the round-1 structure
+    state["params"]["emb"][0] += 1.0
+    t = ck.save(state)
+    assert ck.save_stats[-1]["n_pods_reused"] == 0    # chain was poisoned
+    loaded = ck.load(time_id=t)
+    assert np.array_equal(loaded["params"]["emb"], state["params"]["emb"])
+    ck.save(state)
+    assert ck.save_stats[-1]["n_pods_reused"] > 0     # reuse resumes
+
+
+def test_removed_subtree_is_structural():
+    rng = np.random.default_rng(6)
+    state = _base_state(rng)
+    cache = GraphCache(chunk_bytes=1 << 10)
+    cache.build(state)
+    del state["opt"]
+    g, info = cache.build(state)
+    assert info.structural_change
+    assert "opt/mu" not in g.by_key
+
+
+# ---------------------------------------------------------------------------
+# double-buffered async saver
+# ---------------------------------------------------------------------------
+
+def test_async_submit_does_not_join_previous():
+    s = AsyncSaver(depth=2)
+    done = []
+    s.submit(lambda: (time.sleep(0.3), done.append("a")))
+    t0 = time.perf_counter()
+    s.submit(lambda: done.append("b"))        # old behavior: joined 0.3s
+    elapsed = time.perf_counter() - t0
+    assert elapsed < 0.15, elapsed
+    assert s.n_stalls == 0
+    assert s.n_overlapped == 1
+    s.wait()
+    assert done == ["a", "b"]
+
+
+def test_async_backpressure_counts_stalls():
+    s = AsyncSaver(depth=2)
+    s.submit(lambda: time.sleep(0.2))
+    s.submit(lambda: None)
+    t0 = time.perf_counter()
+    s.submit(lambda: None)                    # pipeline full → must stall
+    assert time.perf_counter() - t0 > 0.05
+    assert s.n_stalls == 1
+    s.wait()
+    assert not s.busy
+
+
+def test_async_zero_stalls_when_previous_finishes_first():
+    s = AsyncSaver(depth=2)
+    for _ in range(4):
+        s.submit(lambda: None)
+        s.wait()
+    assert s.n_stalls == 0
+
+
+def test_async_error_surfaces_on_wait_and_pipeline_survives():
+    s = AsyncSaver(depth=2)
+
+    def boom():
+        raise RuntimeError("podding failed")
+
+    s.submit(boom)
+    with pytest.raises(RuntimeError, match="podding failed"):
+        s.wait()
+    done = []
+    s.submit(lambda: done.append("again"))    # saver still usable
+    s.wait()
+    assert done == ["again"]
+
+
+def test_async_error_surfaces_on_next_submit():
+    """A fire-and-forget loop that never calls wait() must still observe
+    a failed save — the pending error re-raises at the next submit and
+    the new fn is not enqueued."""
+    s = AsyncSaver(depth=2)
+
+    def boom():
+        raise RuntimeError("disk full")
+
+    s.submit(boom)
+    while s.busy:
+        time.sleep(0.005)
+    dropped = []
+    with pytest.raises(RuntimeError, match="disk full"):
+        s.submit(lambda: dropped.append(1))
+    s.wait()                                  # error already consumed
+    assert dropped == []
+    s.submit(lambda: dropped.append(2))       # saver remains usable
+    s.wait()
+    assert dropped == [2]
+
+
+def test_dropped_async_save_does_not_corrupt_next_save():
+    """When submit() re-raises a previous save's failure, the current
+    save is dropped AFTER the graph cache advanced — the next save must
+    not diff against the phantom build and alias stale pod bytes."""
+    rng = np.random.default_rng(9)
+    w = rng.standard_normal((64, 4)).astype(np.float32)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 10, async_mode=True)
+    ck.save({"w": w, "step": 1})
+    ck.wait()
+    orig = ck.store.put_manifest
+    ck.store.put_manifest = lambda *a, **kw: (_ for _ in ()).throw(
+        IOError("disk full"))
+    ck.save({"w": w, "step": 2})                  # body fails
+    while ck.saver.busy:
+        time.sleep(0.005)
+    ck.store.put_manifest = orig
+    with pytest.raises(IOError):
+        ck.save({"w": w, "step": 3})              # dropped at submit
+    t = ck.save({"w": w, "step": 3})              # same state as the drop
+    ck.wait()
+    assert ck.load(time_id=t)["step"] == 3
+
+
+def test_async_chipmink_overlapped_saves_consistent():
+    """Back-to-back async saves (no wait between) must retire FIFO and
+    produce the same artifacts as synchronous saving."""
+    rng = np.random.default_rng(7)
+    emb = rng.standard_normal((1024, 16)).astype(np.float32)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 10, async_mode=True)
+    sync = Chipmink(MemoryStore(), chunk_bytes=1 << 10)
+    tids = []
+    for i in range(4):
+        emb = emb.copy()                      # fresh buffer per save: the
+        emb[i] += 1.0                         # snapshot rule for host state
+        state = {"params": {"emb": emb}, "step": i}
+        tids.append(ck.save(state))
+        sync.save(state)
+    ck.wait()
+    for t in tids:
+        a, b = ck.load(time_id=t), sync.load(time_id=t)
+        assert _tree_equal(a, b)
+        assert _strip(ck.store.get_manifest(t)) == \
+               _strip(sync.store.get_manifest(t))
