@@ -1,0 +1,179 @@
+"""Version manager benchmark: delta-aware checkout vs full load, and GC
+reclaim on a branchy exploration workload.
+
+    PYTHONPATH=src python -m benchmarks.bench_version [--quick]
+
+Workload: a base "pre-training" trajectory on main, then K fine-tune
+branches forked from the base tip, each applying sparse row mutations —
+the paper's continuous non-linear exploration story.  Measured:
+
+  * **checkout**: switching between sibling branch tips with the delta
+    path vs a cold full `load()` of the same commit — store bytes read
+    (`StoreStats.read_bytes`), pods fetched vs served live, wall time,
+    and whether the first save after the checkout engaged the incremental
+    path (`n_pods_reused > 0`, the no-from-scratch-fallback contract).
+  * **gc**: all but one branch deleted, then mark-and-sweep — dry-run
+    estimate vs actual bytes reclaimed (must match exactly), reclaim
+    ratio of the store, and post-GC checkout integrity of the survivor.
+
+Rows land in ``experiments/bench/BENCH_version.json`` for per-PR diffing;
+CI runs the --quick config as a smoke check.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "bench", "BENCH_version.json")
+
+#: (rows, d, base_saves, n_branches, branch_saves, dirty_rows, chunk_bytes)
+FULL_CFG = (16384, 64, 4, 3, 4, 8, 1 << 12)
+QUICK_CFG = (4096, 32, 2, 2, 2, 4, 1 << 12)
+
+
+def _build_branchy_store(cfg):
+    from repro.core import Chipmink, MemoryStore
+    rows, d, base_saves, n_branches, branch_saves, dirty, chunk = cfg
+    rng = np.random.default_rng(0)
+    ck = Chipmink(MemoryStore(), chunk_bytes=chunk)
+
+    emb = rng.standard_normal((rows, d)).astype(np.float32)
+    mu = np.zeros_like(emb)
+    state = {"params": {"emb": emb}, "opt": {"mu": mu}, "step": 0}
+    for i in range(base_saves):
+        if i:
+            idx = rng.integers(0, rows, size=dirty)
+            emb[idx] += 1e-2
+        state["step"] = i
+        ck.save(state)
+    base_tip = ck.versions.resolve("main")
+
+    tips: Dict[str, int] = {}
+    for b in range(n_branches):
+        name = f"ft-{b}"
+        ck.checkout("main")
+        ck.branch(name)
+        s = ck.checkout(name)
+        for i in range(branch_saves):
+            idx = rng.integers(0, rows, size=dirty)
+            s["params"]["emb"][idx] += 1e-2 * (b + 1)
+            s["step"] = 100 * (b + 1) + i
+            tips[name] = ck.save(s)
+    return ck, base_tip, tips
+
+
+def bench_version(quick: bool = False) -> List[Dict]:
+    from repro.core import Chipmink, MemoryStore
+
+    cfg = QUICK_CFG if quick else FULL_CFG
+    rows_out: List[Dict] = []
+    ck, base_tip, tips = _build_branchy_store(cfg)
+    names = sorted(tips)
+
+    # -- checkout: hop across every pair of sibling tips ----------------
+    delta_bytes: List[int] = []
+    delta_ms: List[float] = []
+    fetched: List[int] = []
+    live: List[int] = []
+    reuse_ok = True
+    for i, name in enumerate(names * 2):
+        t0 = time.perf_counter()
+        r0 = ck.store.stats.read_bytes
+        s = ck.checkout(name)
+        delta_ms.append((time.perf_counter() - t0) * 1e3)
+        delta_bytes.append(ck.store.stats.read_bytes - r0)
+        cs = ck.last_checkout_stats
+        fetched.append(cs.n_pods_fetched)
+        live.append(cs.n_pods_live)
+        # contract: the first save after a checkout stays incremental
+        s["params"]["emb"][i % s["params"]["emb"].shape[0]] += 1e-3
+        tips[name] = ck.save(s)
+        if ck.save_stats[-1]["n_pods_reused"] == 0:
+            reuse_ok = False
+
+    # full-load baseline: same commit, cold reader (fresh stats window)
+    cold = Chipmink(MemoryStore(), chunk_bytes=cfg[6])
+    cold.store._pods = ck.store._pods
+    cold.store._manifests = ck.store._manifests
+    cold.store._meta = ck.store._meta
+    full_bytes: List[int] = []
+    full_ms: List[float] = []
+    for name in names:
+        t0 = time.perf_counter()
+        r0 = cold.store.stats.read_bytes
+        cold.load(time_id=tips[name])
+        full_ms.append((time.perf_counter() - t0) * 1e3)
+        full_bytes.append(cold.store.stats.read_bytes - r0)
+
+    med = lambda xs: float(np.median(xs))
+    rows_out.append({
+        "bench": "version", "workload": "branch_hop",
+        "n_branches": len(names),
+        "delta_read_bytes_p50": int(med(delta_bytes)),
+        "full_read_bytes_p50": int(med(full_bytes)),
+        "read_reduction_x": round(med(full_bytes) / max(med(delta_bytes), 1),
+                                  2),
+        "pods_fetched_p50": int(med(fetched)),
+        "pods_live_p50": int(med(live)),
+        "checkout_ms_p50": round(med(delta_ms), 3),
+        "full_load_ms_p50": round(med(full_ms), 3),
+        "delta_beats_full": bool(med(delta_bytes) < med(full_bytes)),
+        "post_checkout_save_incremental": bool(reuse_ok),
+    })
+
+    # -- gc: drop all but one branch, sweep, verify survivor ------------
+    keep = names[0]
+    ck.checkout(keep)
+    for name in names[1:]:
+        ck.versions.delete_branch(name)
+    total_before = ck.store.total_bytes()
+    dry = ck.gc(dry_run=True)
+    real = ck.gc()
+    survivor = ck.checkout(tips[keep])       # must still restore
+    ok = bool(survivor["step"] is not None)
+    for meta in ck.store.get_manifest(tips[keep])["pods"].values():
+        ok = ok and ck.store.has_pod(meta["d"])
+    rows_out.append({
+        "bench": "version", "workload": "gc",
+        "n_branches_deleted": len(names) - 1,
+        "commits_swept": real.n_commits_deleted,
+        "pods_swept": real.n_pods_deleted,
+        "dry_run_bytes": dry.bytes_reclaimed,
+        "reclaimed_bytes": real.bytes_reclaimed,
+        "dry_run_matches_actual": bool(
+            dry.bytes_reclaimed == real.bytes_reclaimed),
+        "reclaim_ratio": round(real.bytes_reclaimed / max(total_before, 1),
+                               4),
+        "survivor_checkout_ok": ok,
+    })
+
+    os.makedirs(os.path.dirname(OUT_JSON), exist_ok=True)
+    payload = {
+        "config": {"rows": cfg[0], "d": cfg[1], "base_saves": cfg[2],
+                   "n_branches": cfg[3], "branch_saves": cfg[4],
+                   "dirty_rows": cfg[5], "chunk_bytes": cfg[6],
+                   "quick": quick},
+        "summary": rows_out,
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return rows_out
+
+
+def main() -> None:
+    import argparse
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="small config for CI smoke runs")
+    args = p.parse_args()
+    for row in bench_version(quick=args.quick):
+        print(",".join(f"{k}={v}" for k, v in row.items()))
+
+
+if __name__ == "__main__":
+    main()

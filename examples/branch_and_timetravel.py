@@ -1,10 +1,11 @@
 """Non-linear exploration (the paper's versioning story, §1/§3.1):
 
-Pre-train a base model, then branch TWO fine-tunes from the same TimeID —
-one freezing everything but the top layer, one freezing the embeddings.
-Chipmink's content-addressed pods dedup the branches against the base and
-against each other; the active-variable filter skips frozen subtrees
-without even hashing them.
+Pre-train a base model, then fork TWO fine-tune branches with the version
+manager — `branch` / `checkout` instead of raw parent TimeIDs.  One
+branch freezes everything but the top layer, one freezes the embeddings.
+Content-addressed pods dedup the branches against the base and each
+other; delta-aware checkout hops between branch tips reading only the
+pods that differ; `log` shows lineage; `gc` reclaims a discarded branch.
 
     PYTHONPATH=src python examples/branch_and_timetravel.py
 """
@@ -27,7 +28,9 @@ from repro.train.optimizer import OptConfig
 from repro.train.train_step import init_train_state, make_train_step
 
 
-def run_branch(name, ck, base_tid, cfg, state, frozen, steps=10):
+def run_branch(name, ck, cfg, state, frozen, steps=10):
+    """Fork a branch at the current HEAD and fine-tune on it."""
+    ck.branch(name)
     opt_cfg = OptConfig(lr=1e-3)
     pipe = TokenPipeline(cfg.vocab, 4, 64, seed=hash(name) % 1000)
     step_fn = jax.jit(make_train_step(cfg, opt_cfg, frozen=frozen,
@@ -40,12 +43,11 @@ def run_branch(name, ck, base_tid, cfg, state, frozen, steps=10):
         batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
         state, metrics = step_fn(state, batch)
         if (i + 1) % 5 == 0:
-            tid = ck.save(snapshot_of(state, pipe), readonly_paths=readonly,
-                          parent=base_tid)
+            tid = ck.save(snapshot_of(state, pipe), readonly_paths=readonly)
     wrote = ck.store.total_bytes() - before
     print(f"branch {name:10s}: frozen={len(frozen)} prefixes, "
           f"loss={float(metrics['nll']):.3f}, wrote {wrote/1e6:.2f} MB "
-          f"(base was {before/1e6:.2f} MB), head TimeID={tid}")
+          f"(base was {before/1e6:.2f} MB), tip TimeID={tid}")
     return tid, state
 
 
@@ -54,7 +56,7 @@ def main() -> None:
     opt_cfg = OptConfig(lr=1e-3)
     ck = Chipmink(MemoryStore(), LGA(), chunk_bytes=1 << 16)
 
-    # base pre-training
+    # base pre-training on main
     params = init_model_params(cfg, jax.random.key(0))
     state = init_train_state(cfg, params, opt_cfg)
     pipe = TokenPipeline(cfg.vocab, 4, 64)
@@ -63,22 +65,43 @@ def main() -> None:
         batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
         state, _ = step_fn(state, batch)
     base_tid = ck.save(snapshot_of(state, pipe))
-    print(f"base model saved: TimeID={base_tid}, "
+    ck.tag("base", at=base_tid)
+    print(f"base model saved: TimeID={base_tid} (tag 'base'), "
           f"{ck.store.total_bytes()/1e6:.2f} MB")
 
     frozen_a = tuple(f"params/layers/{i}" for i in range(cfg.n_layers - 1)
                      ) + ("params/embed",)
-    tid_a, _ = run_branch("top-only", ck, base_tid, cfg, state, frozen_a)
-    tid_b, _ = run_branch("no-embed", ck, base_tid, cfg, state,
-                          ("params/embed",))
+    tid_a, _ = run_branch("top-only", ck, cfg, state, frozen_a)
+    ck.checkout("main")                       # rewind before the next fork
+    tid_b, _ = run_branch("no-embed", ck, cfg, state, ("params/embed",))
 
-    # time travel: the base is still loadable bit-for-bit
-    base = ck.load(names={"step"}, time_id=base_tid)
-    print(f"time-travel to base: step={base['step']}")
-    manifest = ck.store.get_manifest(tid_a)
-    print(f"branch A parent pointer: {manifest['parent']} == {base_tid}")
+    # lineage: both branches fork from the base commit
+    print("log(no-embed):",
+          [(e["time_id"], e["branch"] or e["tag"]) for e in ck.log()])
+    print(f"merge_base(top-only, no-embed) = "
+          f"{ck.versions.merge_base('top-only', 'no-embed')} == {base_tid}")
+
+    # delta-aware time travel: hop to the sibling tip, reading only the
+    # pods the two branches do not share
+    d = ck.diff("no-embed", "top-only")
+    r0 = ck.store.stats.read_bytes
+    ck.checkout("top-only")
+    cs = ck.last_checkout_stats
+    print(f"checkout top-only: {cs.n_pods_fetched}/{cs.n_pods} pods from "
+          f"store ({(ck.store.stats.read_bytes - r0)/1e6:.2f} MB read), "
+          f"{cs.n_pods_live} served from memory; branches share "
+          f"{d.n_shared} pods ({d.bytes_shared/1e6:.2f} MB)")
+
+    # time travel to the tagged base, then gc a discarded branch
+    base = ck.checkout("base")
+    print(f"time-travel to tag 'base': step={base['step']}")
+    ck.checkout("top-only")
+    ck.versions.delete_branch("no-embed")
+    g = ck.gc()
     st = ck.store.stats.as_dict()
-    print(f"total store {ck.store.total_bytes()/1e6:.2f} MB; "
+    print(f"gc: swept {g.n_pods_deleted} pods / {g.n_commits_deleted} "
+          f"commits, reclaimed {g.bytes_reclaimed/1e6:.2f} MB; store now "
+          f"{ck.store.total_bytes()/1e6:.2f} MB; "
           f"{st['pods_deduped']} pod writes deduped across branches")
 
 

@@ -2,7 +2,9 @@
 contribution), adapted to JAX training/serving state.
 
 Public API:
-    Chipmink          — save(state)->TimeID / load(names, time_id)
+    Chipmink          — save(state)->TimeID / load(names, time_id), plus
+                        the versioning surface: branch / tag / checkout /
+                        log / diff / gc (mechanism in repro.version)
     LGA, BundleAll, SplitAll, RandomPolicy, TbH, lga0, lga1
     build_graph, pod_graph
     MemoryStore, FileStore

@@ -32,6 +32,30 @@ from ..kernels import ops as kops
 from .graph import CHUNK, Node, ObjectGraph
 
 
+def pack_digest_table(digests: Dict[str, bytes]) -> Dict[str, bytes]:
+    """Compact a chunk-keyed digest table for manifest persistence.
+
+    Chunk keys repeat their leaf path per chunk (`lkey#[ci]`), so the
+    persisted form concatenates the 16-byte digests of each leaf in
+    chunk-index order under the leaf key alone: {leaf_key: digests_blob}.
+    """
+    per_leaf: Dict[str, List[Tuple[int, bytes]]] = {}
+    for key, dig in digests.items():
+        lkey, _, ci = key.rpartition("#[")
+        per_leaf.setdefault(lkey, []).append((int(ci[:-1]), dig))
+    return {lkey: b"".join(d for _, d in sorted(rows))
+            for lkey, rows in per_leaf.items()}
+
+
+def unpack_digest_table(packed: Dict[str, bytes]) -> Dict[str, bytes]:
+    """Inverse of `pack_digest_table`: back to {chunk_key: 16-byte digest}."""
+    out: Dict[str, bytes] = {}
+    for lkey, blob in packed.items():
+        for ci in range(len(blob) // 16):
+            out[f"{lkey}#[{ci}]"] = blob[16 * ci:16 * (ci + 1)]
+    return out
+
+
 @dataclasses.dataclass
 class ChangeReport:
     digests: Dict[str, bytes]          # chunk key -> 16-byte digest
@@ -56,6 +80,36 @@ class ChangeDetector:
         # leaf key -> chunk count fully present in the table (fast check
         # for "has every chunk of this inactive leaf been seen before")
         self._seen_leaves: Dict[str, int] = {}
+
+    # ------------------------------------------------------------------
+    # digest-table export/import (delta-aware checkout)
+    # ------------------------------------------------------------------
+    def export_table(self) -> Dict[str, bytes]:
+        """Snapshot the persistent digest table as {chunk_key: digest}."""
+        if self._table is None:
+            return {}
+        buf = self._table.tobytes()
+        return {k: buf[16 * i:16 * (i + 1)] for k, i in self._index.items()}
+
+    def import_table(self, digests: Dict[str, bytes]) -> None:
+        """Replace the persistent digest table wholesale.
+
+        Used by delta-aware checkout: the target manifest carries the
+        chunk digests of the committed state, so priming the table from it
+        makes the very next `save()` diff against the *checked-out* state
+        — only chunks actually mutated after the checkout come out dirty —
+        without re-fingerprinting anything.
+        """
+        keys = list(digests)
+        table = np.empty((len(keys), 4), np.uint32)
+        seen_leaves: Dict[str, int] = {}
+        for i, key in enumerate(keys):
+            table[i] = np.frombuffer(digests[key], np.uint32)
+            lkey = key.rpartition("#[")[0]
+            seen_leaves[lkey] = seen_leaves.get(lkey, 0) + 1
+        self._table = table
+        self._index = {k: i for i, k in enumerate(keys)}
+        self._seen_leaves = seen_leaves
 
     # ------------------------------------------------------------------
     def _digest(self, leaves: List[Node], graph: ObjectGraph

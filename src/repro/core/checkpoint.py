@@ -41,6 +41,41 @@ with the *delta*, mirroring the device half's batched digest engine:
 Ablation switches (`enable_cd`, `enable_avf`, `async_mode`) exist to
 reproduce the paper's §8.8/§8.9 baselines (NoCD/AVF, OnlyCD, OnlyAVF,
 Sync); `incremental=False` restores the from-scratch host path.
+
+Versioning contract (repro.version)
+-----------------------------------
+Every save is a *commit*: its manifest records the parent TimeID (by
+default the current HEAD — pass ``parent=`` to override), a commit DAG
+with named branch refs / tags / HEAD persists alongside the store
+(`store.put_meta("refs")`), and the chunk-digest table of the save is
+embedded in the manifest (``"chunks"``) so a later checkout can prime
+change detection without re-fingerprinting.  The surface mirrors git:
+
+  * ``branch(name)`` forks at HEAD and switches to the new branch;
+    subsequent saves advance it.  ``tag(name)`` pins a commit.
+  * ``checkout(ref)`` restores a branch/tag/TimeID **delta-aware**: pods
+    whose digest matches the live in-memory state are re-serialized from
+    memory, so store reads scale with the branch delta, not model size.
+    Checkout then primes `GraphCache`, the `ChangeDetector` table, and
+    the committed `PodAssignment`, so the very next ``save()`` runs the
+    incremental path (``n_pods_reused > 0``) instead of a from-scratch
+    fallback.  Checkout drains in-flight async saves first; the delta
+    path assumes the tracked state was not mutated in place since the
+    last save (the l_active discipline).
+  * ``gc()`` mark-and-sweeps pods/manifests unreachable from any branch,
+    tag, or HEAD (dry-run supported; the in-memory HEAD is always a
+    root).  Swept digests are pruned from the thesaurus so a future save
+    that recreates identical content rewrites the pod instead of
+    aliasing a deleted blob.
+  * ``log()`` / ``diff(a, b)`` answer lineage and pod-granular deltas.
+
+Copy-on-submit: with ``async_mode=True``, host-mutable numpy leaves no
+larger than ``copy_on_submit_bytes`` (default 1 MiB) are snapshotted on
+the caller's thread at ``save()`` time (counted in ``n_leaf_copies``),
+so in-place mutation of small host state (counters, cursors, norm stats)
+before ``wait()`` can no longer corrupt an in-flight save.  Larger numpy
+leaves keep the must-not-mutate-before-wait rule; jax.Arrays were always
+immune.
 """
 from __future__ import annotations
 
@@ -52,13 +87,13 @@ import numpy as np
 
 from .active_filter import ActiveVariableFilter
 from .async_saver import AsyncSaver
-from .change_detector import ChangeDetector
+from .change_detector import ChangeDetector, pack_digest_table
 from .graph import ObjectGraph, build_graph, rebuild_tree
 from .graph_cache import GraphCache, IncrementalBuildInfo
 from .lga import LGA, PoddingPolicy
-from .memo import GlobalMemoSpace
 from .podding import (PodAssignment, Unpodder, batched_chunk_fetch,
-                      pod_graph, pod_structural_digest, serialize_pod)
+                      open_manifest, pod_graph, pod_structural_digest,
+                      serialize_pod)
 from .store import BaseStore, MemoryStore
 from .thesaurus import PodThesaurus
 from .volatility import FlipTracker
@@ -82,6 +117,7 @@ class Chipmink:
         async_depth: int = 2,
         incremental: bool = True,
         track_flips: bool = True,
+        copy_on_submit_bytes: int = 1 << 20,
         seed: int = 0,
     ) -> None:
         self.store = store if store is not None else MemoryStore()
@@ -100,10 +136,24 @@ class Chipmink:
         self.saver = AsyncSaver(depth=async_depth)
         self._graph_cache = (GraphCache(chunk_bytes=chunk_bytes)
                              if incremental else None)
-        self._next_time: TimeID = 1
+        self.copy_on_submit_bytes = copy_on_submit_bytes
         self._prev_pods: Optional[PodAssignment] = None
         self._prev_graph: Optional[ObjectGraph] = None
         self._pod_digests: Dict[int, bytes] = {}   # prev save's pod digests
+        # Resume TimeIDs after the store's newest manifest: a reopened
+        # store must append commits, never overwrite them (TimeIDs are
+        # namespace-global, not per-process).
+        existing = self.store.list_time_ids()
+        self._next_time = (existing[-1] + 1) if existing else 1
+        # runtime import: version depends on core, never the reverse at
+        # module import time.  Built eagerly so the caller thread and the
+        # podding thread share one DAG instance from the start.
+        from ..version import CommitDAG
+        self.versions = CommitDAG(self.store)
+        #: last saved/checked-out tid; resumes from the persisted HEAD so
+        #: a reopened instance chains its first commit to the old tip.
+        self._head: Optional[TimeID] = self.versions.head_commit()
+        self.last_checkout_stats = None
         self.save_stats: List[Dict[str, Any]] = []
 
     # ------------------------------------------------------------------
@@ -120,6 +170,8 @@ class Chipmink:
     ) -> TimeID:
         time_id = self._next_time
         self._next_time += 1
+        if parent is None:
+            parent = self._head          # commit chains to HEAD by default
 
         # graph build runs on the caller's thread: it is the snapshot that
         # makes overlapped async saves sound (scalar values are copied into
@@ -130,11 +182,24 @@ class Chipmink:
         else:
             graph = build_graph(state, chunk_bytes=self.chunk_bytes)
             ginfo = None
+
+        # copy-on-submit: small host-mutable numpy leaves are snapshotted
+        # on the caller's thread so in-place mutation before wait() cannot
+        # corrupt the overlapped body (jax.Arrays are immutable already;
+        # large host leaves keep the must-not-mutate-before-wait rule).
+        n_leaf_copies = 0
+        if self.async_mode and self.copy_on_submit_bytes > 0:
+            for key, arr in graph.arrays.items():
+                if (isinstance(arr, np.ndarray) and arr.flags.writeable
+                        and arr.nbytes <= self.copy_on_submit_bytes):
+                    graph.arrays[key] = arr.copy()
+                    n_leaf_copies += 1
         t_graph = _time.perf_counter() - t0
 
         def work() -> None:
             self._save_body(time_id, graph, ginfo, accessed_vars,
-                            touched_prefixes, readonly_paths, parent, t_graph)
+                            touched_prefixes, readonly_paths, parent, t_graph,
+                            n_leaf_copies)
 
         if self.async_mode:
             try:
@@ -156,31 +221,38 @@ class Chipmink:
                 raise
         else:
             work()
+        self._head = time_id
         return time_id
 
     def wait(self) -> None:
         self.saver.wait()
 
     def _save_body(self, time_id, graph, ginfo, accessed_vars,
-                   touched_prefixes, readonly_paths, parent, t_graph) -> None:
+                   touched_prefixes, readonly_paths, parent, t_graph,
+                   n_leaf_copies=0) -> None:
         try:
             self._save_body_inner(time_id, graph, ginfo, accessed_vars,
                                   touched_prefixes, readonly_paths, parent,
-                                  t_graph)
+                                  t_graph, n_leaf_copies)
         except BaseException:
             # A half-applied save poisons the reuse chain: the graph cache
             # has already advanced (build happens at save() call time), so
             # the next save must re-pod and re-hash from its own graph
             # rather than trust artifacts of a save that never finished.
+            # Lineage must not name the failed TimeID (it has no manifest)
+            # as a parent: fall back to the last commit that actually
+            # landed, so the branch's ancestry stays intact.
             self._prev_pods = None
             self._prev_graph = None
             self._pod_digests = {}
+            self._head = self.versions.head_commit()
             raise
 
     def _save_body_inner(self, time_id, graph, ginfo, accessed_vars,
                          touched_prefixes, readonly_paths, parent,
-                         t_graph) -> None:
-        stats: Dict[str, Any] = {"time_id": time_id, "t_graph": t_graph}
+                         t_graph, n_leaf_copies=0) -> None:
+        stats: Dict[str, Any] = {"time_id": time_id, "t_graph": t_graph,
+                                 "n_leaf_copies": n_leaf_copies}
         if ginfo is not None:
             stats["t_graph_inc"] = t_graph
             stats["n_nodes_reused"] = ginfo.n_nodes_reused
@@ -334,11 +406,17 @@ class Chipmink:
             "root_pod": asg.root_pod,
             "page_size": self.memo_page_size,
             "pods": {str(pid): meta for pid, meta in pods_meta.items()},
+            # the save's full chunk-digest table, so a later delta-aware
+            # checkout can prime change detection without re-hashing
+            "chunks": pack_digest_table(report.digests),
             "stats": {k: v for k, v in stats.items()
                       if isinstance(v, (int, float, str))},
         }
         with self.saver.l_ns:
             self.store.put_manifest(time_id, manifest)
+            # the manifest put is the commit point; the DAG ref advance
+            # rides the same lock so readers see them move together.
+            self.versions.record(time_id, parent)
         self._prev_pods = asg
         self._prev_graph = graph
         self.save_stats.append(stats)
@@ -359,11 +437,7 @@ class Chipmink:
                     raise FileNotFoundError("no checkpoints in store")
                 time_id = tids[-1]
             manifest = self.store.get_manifest(time_id)
-        pages = {int(pid): meta["pages"]
-                 for pid, meta in manifest["pods"].items()}
-        memo = GlobalMemoSpace.from_page_tables(
-            pages, page_size=manifest["page_size"])
-        digests = {int(pid): meta["d"] for pid, meta in manifest["pods"].items()}
+        memo, digests = open_manifest(manifest)
 
         def fetch(pod_id: int) -> bytes:
             return self.store.get_pod(digests[pod_id])
@@ -390,6 +464,77 @@ class Chipmink:
         if like is not None:
             return reflow(like, out)
         return out
+
+    # ------------------------------------------------------------------
+    # versioning (see "Versioning contract" in the module docstring)
+    # ------------------------------------------------------------------
+    def branch(self, name: str, at: Any = None) -> TimeID:
+        """Create branch `name` (at HEAD unless `at` gives a ref/TimeID)
+        and switch to it: subsequent saves advance the new branch."""
+        self.wait()
+        with self.saver.l_ns:
+            return self.versions.create_branch(name, at=at)
+
+    def tag(self, name: str, at: Any = None) -> TimeID:
+        """Pin a commit under an immutable name (a GC root)."""
+        self.wait()
+        with self.saver.l_ns:
+            return self.versions.create_tag(name, at=at)
+
+    def checkout(self, ref: Any = None, *, like: Any = None) -> Any:
+        """Restore the state of a branch / tag / TimeID, delta-aware.
+
+        Only pods whose digest differs from the live in-memory state are
+        read from the store; afterwards the incremental save pipeline is
+        primed so the next `save()` reuses the checked-out assignment.
+        Moves HEAD (onto the branch, or detached for tags/TimeIDs) and
+        returns the restored state (re-flowed into `like` if given).
+        Fine-grained stats land in `self.last_checkout_stats`.
+        """
+        self.wait()
+        from ..version import delta_checkout
+        dag = self.versions
+        tid = dag.resolve(ref)
+        if tid is None:
+            raise FileNotFoundError("no commit to check out")
+        state, stats = delta_checkout(self, tid)
+        self.last_checkout_stats = stats
+        with self.saver.l_ns:
+            if ref is not None:
+                dag.set_head(ref)
+            self._head = tid
+        if like is not None:
+            return reflow(like, state)
+        return state
+
+    def log(self, ref: Any = None, limit: Optional[int] = None):
+        """First-parent history of a ref (default HEAD), newest first.
+        Drains in-flight saves so the newest commit is visible."""
+        self.wait()
+        return self.versions.log(ref, limit=limit)
+
+    def diff(self, a: Any, b: Any):
+        """Pod-granular delta between two refs (see `PodDelta`)."""
+        self.wait()
+        return self.versions.diff(a, b)
+
+    def gc(self, *, dry_run: bool = False):
+        """Mark-and-sweep pods/manifests unreachable from branch refs,
+        tags, and HEAD.  Drains in-flight async saves first, so a pending
+        manifest always lands — and roots its pods — before the mark
+        phase runs.  Swept digests are pruned from the thesaurus so a
+        future save rewrites, not aliases, them.  `dry_run=True` reports
+        the same reclaim the real sweep would free, deleting nothing.
+        """
+        self.wait()
+        from ..version import mark_and_sweep
+        with self.saver.l_ns:
+            stats = mark_and_sweep(self.store, self.versions,
+                                   extra_roots=(self._head,),
+                                   dry_run=dry_run)
+            if not dry_run and stats.deleted_pod_digests:
+                self.thesaurus.prune(stats.deleted_pod_digests)
+        return stats
 
 
 def reflow(like: Any, loaded: Dict[str, Any]) -> Any:

@@ -114,6 +114,21 @@ class GraphCache:
         self.graph = None
         self._scalar_sigs = {}
 
+    def adopt(self, graph: ObjectGraph) -> None:
+        """Install an externally built graph as the cache baseline.
+
+        Used by delta-aware checkout: the graph of the restored state
+        becomes the previous build, so the first `save()` after a checkout
+        re-walks nothing and — with an unchanged structure — reuses the
+        checked-out `PodAssignment` verbatim instead of falling back to a
+        from-scratch build.
+        """
+        self.graph = graph
+        self._next_id = (max(graph.nodes) + 1) if graph.nodes else 0
+        self._scalar_sigs = {n.key: _scalar_sig(n.value)
+                             for n in graph.nodes.values()
+                             if n.kind == SCALAR}
+
     # ------------------------------------------------------------------
     def _fresh_id(self) -> int:
         nid = self._next_id

@@ -280,6 +280,19 @@ def pod_structural_digest(pod: Pod, graph: ObjectGraph, asg: PodAssignment,
     return h.digest()
 
 
+def open_manifest(manifest: Dict[str, Any]
+                  ) -> Tuple[GlobalMemoSpace, Dict[int, str]]:
+    """Decode a manifest's pod table: (memo space from the persisted page
+    tables, {pod_id: digest_hex}).  Single source of truth for the read
+    path — `Chipmink.load` and delta-aware checkout must agree on it."""
+    pages = {int(pid): meta["pages"]
+             for pid, meta in manifest["pods"].items()}
+    memo = GlobalMemoSpace.from_page_tables(
+        pages, page_size=manifest["page_size"])
+    digests = {int(pid): meta["d"] for pid, meta in manifest["pods"].items()}
+    return memo, digests
+
+
 # --------------------------------------------------------------------------
 # Unpodding
 # --------------------------------------------------------------------------
@@ -306,6 +319,11 @@ class Unpodder:
 
     def entry(self, pod_id: int, local: int) -> Dict[str, Any]:
         return self._entries(pod_id)[local]
+
+    def entries(self, pod_id: int) -> List[Dict[str, Any]]:
+        """All entries of a pod in local-id order (entry index == local
+        memo id — what checkout's assignment reconstruction relies on)."""
+        return self._entries(pod_id)
 
     def resolve(self, ctx_pod: int, vid: int) -> Tuple[int, int]:
         return self.memo.resolve(ctx_pod, vid)

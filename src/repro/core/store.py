@@ -8,6 +8,10 @@ pod, per-save statistics, and the parent TimeID (branching/versioning).
 
 Two backends share one interface: a filesystem store (production path) and
 an in-memory store (benchmarks measure logical bytes without disk noise).
+Both support enumeration (`list_pods`, `list_time_ids`) and deletion
+(`delete_pod`, `delete_manifest`) — the substrate of mark-and-sweep GC
+(version/gc.py) — plus small named metadata blobs (`put_meta`/`get_meta`)
+used by the version manager to persist branch refs, tags, and HEAD.
 """
 from __future__ import annotations
 
@@ -39,6 +43,11 @@ class StoreStats:
         self.reads = 0
         self.read_bytes = 0
         self.codec = ""               # codec used by the last compressed put
+        # deletion counters (mark-and-sweep GC)
+        self.pods_deleted = 0
+        self.pod_bytes_deleted = 0
+        self.manifests_deleted = 0
+        self.manifest_bytes_deleted = 0
 
     def as_dict(self) -> Dict[str, Any]:
         return dict(self.__dict__)
@@ -60,6 +69,31 @@ class BaseStore:
 
     def _get_raw(self, digest_hex: str) -> bytes:
         raise NotImplementedError
+
+    def list_pods(self) -> List[str]:
+        """Enumerate the digest of every pod currently in the store."""
+        raise NotImplementedError
+
+    def pod_nbytes(self, digest_hex: str) -> int:
+        """Stored (possibly compressed) size of one pod, 0 if absent."""
+        raise NotImplementedError
+
+    def _delete_raw(self, digest_hex: str) -> None:
+        raise NotImplementedError
+
+    def delete_pod(self, digest_hex: str) -> int:
+        """Remove a pod; returns the number of stored bytes freed (0 if the
+        pod was absent).  Used by mark-and-sweep GC — callers must only
+        delete digests unreachable from every ref (see version/gc.py for
+        the crash-safe ordering: manifests are deleted before pods)."""
+        with self._lock:
+            if not self.has_pod(digest_hex):
+                return 0
+            n = self.pod_nbytes(digest_hex)
+            self._delete_raw(digest_hex)
+            self.stats.pods_deleted += 1
+            self.stats.pod_bytes_deleted += n
+            return n
 
     def put_pod(self, digest_hex: str, data: bytes) -> bool:
         """Write pod bytes unless already present.  Returns True if written."""
@@ -110,8 +144,26 @@ class BaseStore:
     def list_time_ids(self) -> List[int]:
         raise NotImplementedError
 
+    def manifest_nbytes(self, time_id: int) -> int:
+        """Stored size of one manifest, 0 if absent."""
+        raise NotImplementedError
+
+    def delete_manifest(self, time_id: int) -> int:
+        """Remove a manifest; returns bytes freed (0 if absent)."""
+        raise NotImplementedError
+
+    # -- small metadata blobs (branch refs, tags, HEAD) ---------------------
+    def put_meta(self, key: str, data: bytes) -> None:
+        raise NotImplementedError
+
+    def get_meta(self, key: str) -> Optional[bytes]:
+        raise NotImplementedError
+
     def total_bytes(self) -> int:
-        return self.stats.pod_bytes_written + self.stats.manifest_bytes
+        """Current logical footprint: bytes written minus bytes reclaimed."""
+        return (self.stats.pod_bytes_written + self.stats.manifest_bytes
+                - self.stats.pod_bytes_deleted
+                - self.stats.manifest_bytes_deleted)
 
 
 class MemoryStore(BaseStore):
@@ -120,6 +172,7 @@ class MemoryStore(BaseStore):
         self.compress = compress
         self._pods: Dict[str, bytes] = {}
         self._manifests: Dict[int, bytes] = {}
+        self._meta: Dict[str, bytes] = {}
 
     def has_pod(self, digest_hex: str) -> bool:
         return digest_hex in self._pods
@@ -130,6 +183,16 @@ class MemoryStore(BaseStore):
     def _get_raw(self, digest_hex: str) -> bytes:
         return self._pods[digest_hex]
 
+    def list_pods(self) -> List[str]:
+        return sorted(self._pods)
+
+    def pod_nbytes(self, digest_hex: str) -> int:
+        blob = self._pods.get(digest_hex)
+        return len(blob) if blob is not None else 0
+
+    def _delete_raw(self, digest_hex: str) -> None:
+        del self._pods[digest_hex]
+
     def put_manifest(self, time_id: int, manifest: Dict[str, Any]) -> None:
         blob = msgpack.packb(manifest, use_bin_type=True)
         self._manifests[time_id] = blob
@@ -138,6 +201,24 @@ class MemoryStore(BaseStore):
     def get_manifest(self, time_id: int) -> Dict[str, Any]:
         return msgpack.unpackb(self._manifests[time_id], raw=False,
                                strict_map_key=False)
+
+    def manifest_nbytes(self, time_id: int) -> int:
+        blob = self._manifests.get(time_id)
+        return len(blob) if blob is not None else 0
+
+    def delete_manifest(self, time_id: int) -> int:
+        blob = self._manifests.pop(time_id, None)
+        if blob is None:
+            return 0
+        self.stats.manifests_deleted += 1
+        self.stats.manifest_bytes_deleted += len(blob)
+        return len(blob)
+
+    def put_meta(self, key: str, data: bytes) -> None:
+        self._meta[key] = data
+
+    def get_meta(self, key: str) -> Optional[bytes]:
+        return self._meta.get(key)
 
     def list_time_ids(self) -> List[int]:
         return sorted(self._manifests)
@@ -152,6 +233,7 @@ class FileStore(BaseStore):
         self.compress = compress
         os.makedirs(os.path.join(root, "pods"), exist_ok=True)
         os.makedirs(os.path.join(root, "manifests"), exist_ok=True)
+        os.makedirs(os.path.join(root, "meta"), exist_ok=True)
 
     def _pod_path(self, digest_hex: str) -> str:
         d = os.path.join(self.root, "pods", digest_hex[:2])
@@ -172,6 +254,32 @@ class FileStore(BaseStore):
         with open(self._pod_path(digest_hex), "rb") as f:
             return f.read()
 
+    def list_pods(self) -> List[str]:
+        out: List[str] = []
+        pods_dir = os.path.join(self.root, "pods")
+        for shard in sorted(os.listdir(pods_dir)):
+            sd = os.path.join(pods_dir, shard)
+            if not os.path.isdir(sd):
+                continue
+            for fn in sorted(os.listdir(sd)):
+                if fn.endswith(".pod"):
+                    out.append(fn[:-4])
+        return out
+
+    def pod_nbytes(self, digest_hex: str) -> int:
+        try:
+            return os.path.getsize(self._pod_path(digest_hex))
+        except FileNotFoundError:
+            return 0
+
+    def _delete_raw(self, digest_hex: str) -> None:
+        # single unlink: atomic at the filesystem level, so a crash either
+        # leaves the pod intact or fully gone — never truncated (the same
+        # guarantee os.replace gives the write path).  Empty shard dirs are
+        # left behind deliberately: removing them could race a concurrent
+        # _put_raw's makedirs.
+        os.remove(self._pod_path(digest_hex))
+
     def _manifest_path(self, time_id: int) -> str:
         return os.path.join(self.root, "manifests", f"{time_id:08d}.mp")
 
@@ -188,6 +296,39 @@ class FileStore(BaseStore):
     def get_manifest(self, time_id: int) -> Dict[str, Any]:
         with open(self._manifest_path(time_id), "rb") as f:
             return msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
+
+    def manifest_nbytes(self, time_id: int) -> int:
+        try:
+            return os.path.getsize(self._manifest_path(time_id))
+        except FileNotFoundError:
+            return 0
+
+    def delete_manifest(self, time_id: int) -> int:
+        path = self._manifest_path(time_id)
+        try:
+            n = os.path.getsize(path)
+            os.remove(path)
+        except FileNotFoundError:
+            return 0
+        self.stats.manifests_deleted += 1
+        self.stats.manifest_bytes_deleted += n
+        return n
+
+    def _meta_path(self, key: str) -> str:
+        return os.path.join(self.root, "meta", key + ".mp")
+
+    def put_meta(self, key: str, data: bytes) -> None:
+        tmp = self._meta_path(key) + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, self._meta_path(key))  # atomic, like pods/manifests
+
+    def get_meta(self, key: str) -> Optional[bytes]:
+        try:
+            with open(self._meta_path(key), "rb") as f:
+                return f.read()
+        except FileNotFoundError:
+            return None
 
     def head(self) -> Optional[int]:
         try:

@@ -46,5 +46,20 @@ class PodThesaurus:
         self._map[digest] = pod_ref
         self._stack.append(digest)
 
+    def prune(self, dead_refs) -> int:
+        """Drop every entry whose pod reference is in `dead_refs`.
+
+        Must be called after GC deletes pods: a stale entry would make the
+        next save skip writing a pod whose bytes no longer exist, leaving
+        the new manifest pointing at nothing.  Returns entries removed.
+        """
+        dead_set = set(dead_refs)
+        dead = {d for d, ref in self._map.items() if ref in dead_set}
+        for d in dead:
+            del self._map[d]
+        if dead:
+            self._stack = [d for d in self._stack if d not in dead]
+        return len(dead)
+
     def stats(self) -> Tuple[int, int]:
         return self.hits, self.misses

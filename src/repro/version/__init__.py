@@ -1,0 +1,28 @@
+"""Version manager: the version-control layer over the content-addressed
+store (the paper's continuous, non-linear exploration story, §1/§3.1).
+
+Three pillars on top of `repro.core`:
+
+    CommitDAG      — persisted commit graph over manifests with branch
+                     refs, tags, HEAD, lineage queries, and pod-granular
+                     `diff(a, b)` (commit_graph.py)
+    delta_checkout — restore a commit fetching only pods that differ from
+                     the in-memory state, then prime GraphCache /
+                     ChangeDetector / PodAssignment so the next save runs
+                     the incremental path (checkout.py)
+    mark_and_sweep — GC pods and manifests unreachable from any ref, with
+                     dry-run reclaim estimates (gc.py)
+
+`Chipmink` exposes the user surface (`branch` / `checkout` / `log` /
+`tag` / `diff` / `gc`); this package holds the mechanism.  Imports run
+core→version strictly through lazy imports inside Chipmink methods, so
+the package depends on core and never the reverse at import time.
+"""
+from .checkout import CheckoutStats, delta_checkout
+from .commit_graph import DEFAULT_BRANCH, CommitDAG, PodDelta
+from .gc import GCStats, mark_and_sweep
+
+__all__ = [
+    "CheckoutStats", "CommitDAG", "DEFAULT_BRANCH", "GCStats", "PodDelta",
+    "delta_checkout", "mark_and_sweep",
+]

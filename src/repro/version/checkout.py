@@ -1,0 +1,192 @@
+"""Delta-aware checkout: restore a commit by fetching only what differs.
+
+A naive `load(time_id)` reads every pod of the target manifest from the
+store.  But when the caller is *switching* — branch hop, time travel —
+most pods of the target are byte-identical to pods of the state already
+in memory: pod digests are pure functions of content, so a target pod
+whose digest appears in the live digest table (`Chipmink._pod_digests`)
+can be re-serialized from the in-memory graph instead of read from
+storage.  Checkout therefore pays store reads only for the pods that
+actually differ (`StoreStats.read_bytes` scales with the branch delta,
+not the model size).
+
+The second half is **post-checkout priming**, which is what keeps the
+*next* save incremental instead of a from-scratch fallback:
+
+  * the restored state's ObjectGraph is adopted by `GraphCache` as the
+    previous build (stable node ids for the incremental re-walk);
+  * the `ChangeDetector` digest table is imported from the manifest's
+    persisted chunk-digest table (or recomputed in one batched pass for
+    pre-versioning manifests), so the next save diffs against the
+    checked-out state;
+  * the target's `PodAssignment` is *reconstructed* from the pod entries
+    and memo page tables — not re-derived by a policy walk — so the next
+    structurally-unchanged save reuses pods/locals/pages bit-identically
+    to the commit it branched from, and `_pod_digests` is primed straight
+    from the manifest digests.
+
+Contract: the delta path trusts the live digest table, so the tracked
+state must not have been mutated in place since the last save (the same
+l_active discipline every save relies on).  `Chipmink.checkout` drains
+in-flight async saves before calling in here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Any, Dict, Set, Tuple
+
+import numpy as np
+
+from ..core.change_detector import unpack_digest_table
+from ..core.graph import ALIAS, ObjectGraph, build_graph, path_str
+from ..core.memo import GlobalMemoSpace
+from ..core.podding import (Pod, PodAssignment, Unpodder, batched_chunk_fetch,
+                            open_manifest, serialize_pod)
+
+
+@dataclasses.dataclass
+class CheckoutStats:
+    time_id: int
+    n_pods: int = 0               # pods in the target manifest
+    n_pods_fetched: int = 0       # read from the store (the delta)
+    n_pods_live: int = 0          # served from the in-memory state
+    read_bytes: int = 0           # store bytes actually read
+    digest_table_imported: bool = False
+    t_restore: float = 0.0
+    t_prime: float = 0.0
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dict(self.__dict__)
+
+
+def _writable(tree: Any, memo: Dict[int, Any]) -> Any:
+    """Deep-map a restored tree so every array is writable (unpodded
+    arrays are read-only `frombuffer` views of pod bytes), preserving
+    shared references: an aliased array is copied once and both paths
+    keep pointing at the same object."""
+    if isinstance(tree, dict):
+        return {k: _writable(v, memo) for k, v in tree.items()}
+    if isinstance(tree, np.ndarray) and not tree.flags.writeable:
+        got = memo.get(id(tree))
+        if got is None:
+            got = memo[id(tree)] = tree.copy()
+        return got
+    return tree
+
+
+def _assignment_from_pods(graph: ObjectGraph, up: Unpodder,
+                          memo: GlobalMemoSpace,
+                          manifest: Dict[str, Any]) -> PodAssignment:
+    """Rebuild the committed PodAssignment against the restored graph.
+
+    Pod membership and memo locals come from the pod entries themselves
+    (entry order *is* local-id order), pages from the manifest — so the
+    reconstruction is exact: the next reuse-path save emits the same
+    virtual refs, pages, and digests the commit recorded, bit-for-bit.
+    """
+    pods: Dict[int, Pod] = {}
+    node_pod: Dict[int, int] = {}
+    node_local: Dict[int, int] = {}
+    for pid_str in manifest["pods"]:
+        pid = int(pid_str)
+        pod = Pod(pod_id=pid, depth=0)
+        for local, e in enumerate(up.entries(pid)):
+            nid = graph.by_key[e["k"]]
+            node_pod[nid] = pid
+            node_local[nid] = local
+            pod.node_ids.append(nid)
+            pod.size += float(graph.node(nid).size)
+        pods[pid] = pod
+    edges: Set[Tuple[int, int]] = set()
+    for nid, pid in node_pod.items():
+        for cid in graph.node(nid).children:
+            cp = node_pod[cid]
+            if cp != pid:
+                edges.add((pid, cp))
+    for n in graph.nodes.values():
+        if n.kind == ALIAS and n.alias_of is not None:
+            canon_id = graph.by_key.get(path_str(n.alias_of))
+            if canon_id is not None:
+                pa, pb = node_pod[n.node_id], node_pod[canon_id]
+                if pa != pb:
+                    edges.add((pa, pb))
+    return PodAssignment(pods=pods, node_pod=node_pod, node_local=node_local,
+                         memo=memo, root_pod=manifest["root_pod"],
+                         edges=edges)
+
+
+def delta_checkout(ck: Any, time_id: int) -> Tuple[Any, CheckoutStats]:
+    """Restore the state of `time_id` into `ck`, delta-aware, and prime
+    the incremental save pipeline.  Returns (state, stats).
+
+    `ck` is a `Chipmink`; typed as Any to keep the core→version import
+    one-directional (core lazily imports this module, never the reverse).
+    """
+    store = ck.store
+    with ck.saver.l_ns:
+        manifest = store.get_manifest(time_id)
+    memo, digests = open_manifest(manifest)
+
+    stats = CheckoutStats(time_id=time_id, n_pods=len(digests))
+    live_graph = ck._prev_graph
+    live_asg = ck._prev_pods
+    live_by_digest: Dict[str, int] = {}
+    if live_graph is not None and live_asg is not None:
+        live_by_digest = {d.hex(): pid for pid, d in ck._pod_digests.items()}
+    #: target pod id -> live pod id, for pods served from memory
+    live_pids = {pid: live_by_digest[d] for pid, d in digests.items()
+                 if d in live_by_digest}
+
+    reads0 = store.stats.read_bytes
+    t0 = _time.perf_counter()
+
+    # ONE batched gather for every chunk of every live-served pod (the
+    # save path's single-device-sync contract, kept on the restore path).
+    live_chunk_bytes = None
+    if live_pids:
+        nodes = [live_graph.node(nid) for lp in set(live_pids.values())
+                 for nid in live_asg.pods[lp].node_ids]
+        live_chunk_bytes, _ = batched_chunk_fetch(live_graph, nodes)
+
+    def fetch(pod_id: int) -> bytes:
+        live_pid = live_pids.get(pod_id)
+        if live_pid is not None:
+            # byte-identical pod already in memory: serialize it from the
+            # live graph (digest == digest ⇒ bytes == bytes, the same
+            # invariant content-addressed dedup already relies on).
+            pod = live_asg.pods[live_pid]
+            stats.n_pods_live += 1
+            return serialize_pod(pod, live_graph, live_asg, live_chunk_bytes)
+        stats.n_pods_fetched += 1
+        return store.get_pod(digests[pod_id])
+
+    up = Unpodder(memo, fetch)
+    root_pod = manifest["root_pod"]
+    root_entry = up.entry(root_pod, 0)
+    restored: Dict[str, Any] = {}
+    for name, vid in zip(root_entry["m"]["names"], root_entry["r"]):
+        cp, cl = up.resolve(root_pod, vid)
+        restored[name] = up.value(cp, cl)
+    state = _writable(restored, {})
+    stats.t_restore = _time.perf_counter() - t0
+    stats.read_bytes = store.stats.read_bytes - reads0
+
+    # ---- post-checkout priming: make the next save() incremental -------
+    t0 = _time.perf_counter()
+    graph = build_graph(state, chunk_bytes=ck.chunk_bytes)
+    if ck._graph_cache is not None:
+        ck._graph_cache.adopt(graph)
+    packed = manifest.get("chunks")
+    if packed:
+        ck.detector.import_table(unpack_digest_table(packed))
+        stats.digest_table_imported = True
+    else:
+        # pre-versioning manifest: one batched fingerprint pass over the
+        # restored state rebuilds the table the manifest didn't carry.
+        ck.detector.detect(graph, None)
+    ck._prev_pods = _assignment_from_pods(graph, up, memo, manifest)
+    ck._prev_graph = graph
+    ck._pod_digests = {pid: bytes.fromhex(d) for pid, d in digests.items()}
+    stats.t_prime = _time.perf_counter() - t0
+    return state, stats

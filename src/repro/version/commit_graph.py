@@ -1,0 +1,339 @@
+"""Commit DAG over manifests: branch refs, tags, HEAD, lineage, pod diffs.
+
+Every `Chipmink.save` is a *commit*: a manifest keyed by TimeID carrying a
+parent pointer.  The manifests therefore already form a DAG on disk; this
+module gives it the version-control surface the paper's exploration story
+needs (branch a fine-tune, time-travel back, fork again):
+
+  * **refs** — named branches (a ref that advances with each save on it),
+    tags (frozen refs), and HEAD (the current branch, or a detached
+    TimeID).  Refs are persisted as a small msgpack blob through the
+    store's metadata interface (`put_meta("refs")`), atomically on the
+    file backend, so a reopened store resumes exactly where it left off.
+  * **lineage** — `ancestors`, `children`, `merge_base`, and `log`
+    (first-parent walk, newest first), answered from a parent-pointer
+    cache filled lazily from manifests.
+  * **pod-granular diff** — `diff(a, b)` compares the pod digest sets of
+    two manifests: digests only in a, only in b, and shared, with stored
+    byte totals.  This is the unit of work for delta-aware checkout
+    (fetch only `only_b`) and the observability story for dedup across
+    branches.
+
+The DAG never mutates manifests; it only reads them and owns the refs
+blob.  All mutation entry points are serialized by an internal lock so an
+overlapped async save (which records its commit from the podding thread)
+cannot race a caller-side `branch`/`tag`/`checkout`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Dict, Iterable, List, Optional, Set, Union
+
+import msgpack
+
+from ..core.store import BaseStore
+
+REFS_META_KEY = "refs"
+DEFAULT_BRANCH = "main"
+
+Ref = Union[str, int]
+
+
+@dataclasses.dataclass
+class PodDelta:
+    """Pod-granular difference between two commits."""
+
+    tid_a: int
+    tid_b: int
+    only_a: Set[str]
+    only_b: Set[str]
+    shared: Set[str]
+    bytes_only_a: int = 0
+    bytes_only_b: int = 0
+    bytes_shared: int = 0
+
+    @property
+    def n_shared(self) -> int:
+        return len(self.shared)
+
+
+class CommitDAG:
+    """Persisted commit graph + refs over a content-addressed store."""
+
+    def __init__(self, store: BaseStore,
+                 default_branch: str = DEFAULT_BRANCH) -> None:
+        self.store = store
+        self.default_branch = default_branch
+        self.branches: Dict[str, int] = {}
+        self.tags: Dict[str, int] = {}
+        #: current branch name, or None when HEAD is detached
+        self.head_branch: Optional[str] = default_branch
+        #: detached HEAD commit (meaningful only when head_branch is None)
+        self.detached: Optional[int] = None
+        self._parents: Dict[int, Optional[int]] = {}
+        self._lock = threading.RLock()
+        self._load_refs()
+
+    # ------------------------------------------------------------------
+    # persistence
+    # ------------------------------------------------------------------
+    def _load_refs(self) -> None:
+        blob = self.store.get_meta(REFS_META_KEY)
+        if blob is None:
+            self._bootstrap_refs()
+            return
+        refs = msgpack.unpackb(blob, raw=False)
+        self.branches = {str(k): int(v) for k, v in refs["branches"].items()}
+        self.tags = {str(k): int(v) for k, v in refs["tags"].items()}
+        self.head_branch = refs["head_branch"]
+        self.detached = refs["detached"]
+
+    def _bootstrap_refs(self) -> None:
+        """First contact with a pre-versioning store: manifests exist but
+        no refs blob does.  Every commit must stay reachable — GC with an
+        empty mark set would otherwise sweep the entire store — so every
+        childless tip becomes a branch: the newest tip takes the default
+        branch name, the rest get ``tip-<TimeID>`` (deletable by the user
+        before a gc that should actually reclaim them)."""
+        tids = self.store.list_time_ids()
+        if not tids:
+            return
+        self.refresh()
+        with_children = {p for p in self._parents.values() if p is not None}
+        tips = [t for t in tids if t not in with_children]
+        newest = max(tips) if tips else tids[-1]
+        self.branches[self.default_branch] = newest
+        for t in tips:
+            if t != newest:
+                self.branches[f"tip-{t}"] = t
+        self.head_branch = self.default_branch
+        self._flush_refs()
+
+    def _flush_refs(self) -> None:
+        blob = msgpack.packb({
+            "branches": self.branches,
+            "tags": self.tags,
+            "head_branch": self.head_branch,
+            "detached": self.detached,
+        }, use_bin_type=True)
+        self.store.put_meta(REFS_META_KEY, blob)
+
+    def refresh(self) -> None:
+        """Fill the parent cache from every manifest in the store."""
+        with self._lock:
+            for tid in self.store.list_time_ids():
+                if tid not in self._parents:
+                    m = self.store.get_manifest(tid)
+                    self._parents[tid] = m.get("parent")
+
+    # ------------------------------------------------------------------
+    # refs
+    # ------------------------------------------------------------------
+    def resolve(self, ref: Optional[Ref]) -> Optional[int]:
+        """Ref → TimeID: branch name, tag name, literal TimeID, or None
+        (= current HEAD commit)."""
+        with self._lock:
+            if ref is None:
+                return self.head_commit()
+            if isinstance(ref, int):
+                # validate here so a bad TimeID fails uniformly instead of
+                # surfacing a backend-specific error from a later fetch
+                if ref not in self._parents \
+                        and ref not in self.store.list_time_ids():
+                    raise KeyError(f"unknown commit TimeID {ref}")
+                return ref
+            if ref in self.branches:
+                return self.branches[ref]
+            if ref in self.tags:
+                return self.tags[ref]
+            raise KeyError(f"unknown ref {ref!r}")
+
+    def head_commit(self) -> Optional[int]:
+        with self._lock:
+            if self.head_branch is not None:
+                return self.branches.get(self.head_branch)
+            return self.detached
+
+    def record(self, time_id: int, parent: Optional[int]) -> None:
+        """Register a fresh commit and advance HEAD onto it.
+
+        On a branch, the branch ref advances; detached HEAD just moves
+        (the commit is reachable only through HEAD until branched/tagged —
+        exactly git's detached-commit semantics, and exactly what GC
+        protects via the HEAD root).
+        """
+        with self._lock:
+            self._parents[time_id] = parent
+            if self.head_branch is not None:
+                self.branches[self.head_branch] = time_id
+            else:
+                self.detached = time_id
+            self._flush_refs()
+
+    def create_branch(self, name: str, at: Optional[Ref] = None,
+                      switch: bool = True) -> int:
+        with self._lock:
+            if name in self.branches:
+                raise ValueError(f"branch {name!r} already exists")
+            tid = self.resolve(at)
+            if tid is None:
+                raise ValueError("cannot branch: no commit to branch from")
+            self.branches[name] = tid
+            if switch:
+                self.head_branch = name
+                self.detached = None
+            self._flush_refs()
+            return tid
+
+    def delete_branch(self, name: str) -> None:
+        with self._lock:
+            if name == self.head_branch:
+                raise ValueError(f"cannot delete the current branch {name!r}")
+            del self.branches[name]
+            self._flush_refs()
+
+    def create_tag(self, name: str, at: Optional[Ref] = None) -> int:
+        with self._lock:
+            tid = self.resolve(at)
+            if tid is None:
+                raise ValueError("cannot tag: no commit to tag")
+            self.tags[name] = tid
+            self._flush_refs()
+            return tid
+
+    def delete_tag(self, name: str) -> None:
+        with self._lock:
+            del self.tags[name]
+            self._flush_refs()
+
+    def set_head(self, ref: Ref) -> int:
+        """Move HEAD: onto a branch (by name) or detached (tag/TimeID)."""
+        with self._lock:
+            if isinstance(ref, str) and ref in self.branches:
+                self.head_branch = ref
+                self.detached = None
+                tid = self.branches[ref]
+            else:
+                tid = self.resolve(ref)
+                self.head_branch = None
+                self.detached = tid
+            self._flush_refs()
+            return tid
+
+    # ------------------------------------------------------------------
+    # lineage
+    # ------------------------------------------------------------------
+    def parent(self, tid: int) -> Optional[int]:
+        with self._lock:
+            if tid not in self._parents:
+                self._parents[tid] = self.store.get_manifest(tid).get("parent")
+            return self._parents[tid]
+
+    def ancestors(self, tid: int) -> List[int]:
+        """The first-parent chain from `tid` back to the root, inclusive."""
+        out: List[int] = []
+        cur: Optional[int] = tid
+        while cur is not None:
+            out.append(cur)
+            cur = self.parent(cur)
+        return out
+
+    def children(self, tid: int) -> List[int]:
+        with self._lock:
+            self.refresh()
+            return sorted(t for t, p in self._parents.items() if p == tid)
+
+    def merge_base(self, a: Ref, b: Ref) -> Optional[int]:
+        """Nearest common ancestor of two refs (None if disjoint)."""
+        ta, tb = self.resolve(a), self.resolve(b)
+        if ta is None or tb is None:
+            return None
+        seen = set(self.ancestors(ta))
+        cur: Optional[int] = tb
+        while cur is not None:
+            if cur in seen:
+                return cur
+            cur = self.parent(cur)
+        return None
+
+    def log(self, ref: Optional[Ref] = None,
+            limit: Optional[int] = None) -> List[Dict[str, Any]]:
+        """First-parent history of a ref, newest first, with save stats."""
+        tid = self.resolve(ref)
+        if tid is None:
+            return []
+        tips = {t: n for n, t in self.branches.items()}
+        tagged = {t: n for n, t in self.tags.items()}
+        out: List[Dict[str, Any]] = []
+        for t in self.ancestors(tid):
+            if limit is not None and len(out) >= limit:
+                break
+            m = self.store.get_manifest(t)
+            stats = m.get("stats", {})
+            out.append({
+                "time_id": t,
+                "parent": m.get("parent"),
+                "branch": tips.get(t),
+                "tag": tagged.get(t),
+                "n_pods": len(m.get("pods", {})),
+                "pods_written": stats.get("pods_written"),
+                "bytes_written": stats.get("bytes_written"),
+            })
+        return out
+
+    # ------------------------------------------------------------------
+    # pod-granular diff + reachability
+    # ------------------------------------------------------------------
+    def pod_digests_of(self, tid: int) -> Set[str]:
+        m = self.store.get_manifest(tid)
+        return {meta["d"] for meta in m.get("pods", {}).values()}
+
+    def diff(self, a: Ref, b: Ref) -> PodDelta:
+        ta, tb = self.resolve(a), self.resolve(b)
+        assert ta is not None and tb is not None
+        da, db = self.pod_digests_of(ta), self.pod_digests_of(tb)
+        only_a, only_b, shared = da - db, db - da, da & db
+
+        def nbytes(digs: Iterable[str]) -> int:
+            return sum(self.store.pod_nbytes(d) for d in digs)
+
+        return PodDelta(tid_a=ta, tid_b=tb, only_a=only_a, only_b=only_b,
+                        shared=shared, bytes_only_a=nbytes(only_a),
+                        bytes_only_b=nbytes(only_b),
+                        bytes_shared=nbytes(shared))
+
+    def roots(self, extra: Iterable[Optional[int]] = ()) -> Set[int]:
+        """GC roots: every branch tip, every tag, HEAD, plus extras."""
+        with self._lock:
+            out = set(self.branches.values()) | set(self.tags.values())
+            head = self.head_commit()
+            if head is not None:
+                out.add(head)
+            out.update(t for t in extra if t is not None)
+            return out
+
+    def live_commits(self, extra_roots: Iterable[Optional[int]] = ()
+                     ) -> Set[int]:
+        """Commits reachable from any root by parent pointers."""
+        live: Set[int] = set()
+        for root in self.roots(extra_roots):
+            cur: Optional[int] = root
+            while cur is not None and cur not in live:
+                live.add(cur)
+                cur = self.parent(cur)
+        return live
+
+    def reachable_digests(self, extra_roots: Iterable[Optional[int]] = ()
+                          ) -> Set[str]:
+        """Pod digests referenced by any live commit (the GC mark set)."""
+        out: Set[str] = set()
+        for tid in self.live_commits(extra_roots):
+            out |= self.pod_digests_of(tid)
+        return out
+
+    def forget(self, time_ids: Iterable[int]) -> None:
+        """Drop swept commits from the parent cache (post-GC upkeep)."""
+        with self._lock:
+            for tid in time_ids:
+                self._parents.pop(tid, None)

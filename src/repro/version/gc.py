@@ -1,0 +1,92 @@
+"""Mark-and-sweep pod GC over the commit DAG.
+
+Content-addressed dedup makes the store append-only: abandoned
+exploration branches, rebased fine-tunes, and detached commits keep their
+pods forever.  "To Store or Not to Store" frames the tradeoff — storage
+is only worth paying for states someone can still reach.  The collector
+realizes that over refs:
+
+  * **mark** — live commits are everything reachable (by parent pointers)
+    from any branch tip, tag, or HEAD, plus caller-supplied extra roots
+    (`Chipmink.gc` passes its in-memory HEAD so the state the next save
+    will delta against is never collected).  Live pod digests are the
+    union of the live manifests' pod tables.
+  * **sweep** — every manifest of a dead commit and every pod digest
+    outside the mark set is deleted.  Order matters for crash safety on
+    the file backend: manifests are deleted *first*, so an interrupted
+    sweep can never leave a manifest pointing at a vanished pod — only
+    unreferenced pods that the next sweep re-collects.
+
+`dry_run=True` performs the full mark and measures the sweep without
+deleting; its byte estimate is computed from the same per-object sizes
+the real sweep frees, so estimate == actual by construction.
+
+The caller must quiesce in-flight saves first (a pending manifest is
+invisible to the mark phase until it lands); `Chipmink.gc` drains its
+async pipeline before calling in here, and must afterwards prune swept
+digests from the thesaurus so future saves rewrite — not alias — them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, List, Optional
+
+from ..core.store import BaseStore
+from .commit_graph import CommitDAG
+
+
+@dataclasses.dataclass
+class GCStats:
+    dry_run: bool
+    n_commits_live: int = 0
+    n_commits_deleted: int = 0
+    n_pods_live: int = 0
+    n_pods_deleted: int = 0
+    pod_bytes_reclaimed: int = 0
+    manifest_bytes_reclaimed: int = 0
+    deleted_pod_digests: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def bytes_reclaimed(self) -> int:
+        return self.pod_bytes_reclaimed + self.manifest_bytes_reclaimed
+
+    def as_dict(self) -> Dict[str, Any]:
+        d = {k: v for k, v in self.__dict__.items()
+             if k != "deleted_pod_digests"}
+        d["bytes_reclaimed"] = self.bytes_reclaimed
+        return d
+
+
+def mark_and_sweep(store: BaseStore, dag: CommitDAG, *,
+                   extra_roots: Iterable[Optional[int]] = (),
+                   dry_run: bool = False) -> GCStats:
+    """Collect pods and manifests unreachable from the DAG's refs."""
+    dag.refresh()
+    stats = GCStats(dry_run=dry_run)
+
+    # mark
+    live_tids = dag.live_commits(extra_roots)
+    live_digests = dag.reachable_digests(extra_roots)
+    stats.n_commits_live = len(live_tids)
+    stats.n_pods_live = len(live_digests)
+
+    dead_tids = [t for t in store.list_time_ids() if t not in live_tids]
+    dead_pods = [d for d in store.list_pods() if d not in live_digests]
+    stats.n_commits_deleted = len(dead_tids)
+    stats.n_pods_deleted = len(dead_pods)
+    stats.deleted_pod_digests = dead_pods
+
+    if dry_run:
+        stats.manifest_bytes_reclaimed = sum(
+            store.manifest_nbytes(t) for t in dead_tids)
+        stats.pod_bytes_reclaimed = sum(
+            store.pod_nbytes(d) for d in dead_pods)
+        return stats
+
+    # sweep: manifests first (crash-safe ordering — see module docstring)
+    for tid in dead_tids:
+        stats.manifest_bytes_reclaimed += store.delete_manifest(tid)
+    for dig in dead_pods:
+        stats.pod_bytes_reclaimed += store.delete_pod(dig)
+    dag.forget(dead_tids)
+    return stats

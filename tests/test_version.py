@@ -1,0 +1,496 @@
+"""Version manager: commit DAG + branch refs, delta-aware checkout parity
+and read-delta guarantees, mark-and-sweep GC safety, store deletion
+backends, and copy-on-submit snapshots under overlapped async saves."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import Chipmink, FileStore, MemoryStore
+from repro.version import CommitDAG, mark_and_sweep
+
+
+def _mk_state(rng, rows=1024):
+    state = {
+        "params": {"emb": rng.standard_normal((rows, 16)).astype(np.float32),
+                   "w": rng.standard_normal((32, 32)).astype(np.float32)},
+        "opt": {"mu": np.zeros((rows, 16), np.float32)},
+        "step": 0,
+    }
+    state["params"]["tied"] = state["params"]["emb"]
+    return state
+
+
+def _strip(manifest):
+    """Manifest minus fields legitimately differing between instances."""
+    return {k: v for k, v in manifest.items()
+            if k not in ("stats", "time_id", "parent")}
+
+
+# ---------------------------------------------------------------------------
+# store backends: enumeration + deletion + meta (GC substrate)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mk_store", [
+    lambda tmp: MemoryStore(),
+    lambda tmp: FileStore(str(tmp)),
+], ids=["memory", "file"])
+def test_store_enumerate_and_delete(tmp_path, mk_store):
+    store = mk_store(tmp_path)
+    store.put_pod("aa" * 16, b"x" * 100)
+    store.put_pod("bb" * 16, b"y" * 50)
+    store.put_manifest(1, {"pods": {}})
+    assert store.list_pods() == sorted(["aa" * 16, "bb" * 16])
+    assert store.pod_nbytes("aa" * 16) == 100
+    assert store.manifest_nbytes(1) > 0
+
+    before = store.total_bytes()
+    freed = store.delete_pod("aa" * 16)
+    assert freed == 100
+    assert not store.has_pod("aa" * 16)
+    assert store.list_pods() == ["bb" * 16]
+    assert store.delete_pod("aa" * 16) == 0          # idempotent
+    assert store.total_bytes() == before - 100
+    assert store.stats.pods_deleted == 1
+
+    mfreed = store.delete_manifest(1)
+    assert mfreed > 0 and store.list_time_ids() == []
+    assert store.delete_manifest(1) == 0
+
+    store.put_meta("refs", b"hello")
+    assert store.get_meta("refs") == b"hello"
+    assert store.get_meta("absent") is None
+
+
+# ---------------------------------------------------------------------------
+# commit DAG: lineage, refs, persistence
+# ---------------------------------------------------------------------------
+
+def test_commit_dag_lineage_and_merge_base():
+    rng = np.random.default_rng(0)
+    state = _mk_state(rng)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12)
+    t1 = ck.save(state)
+    state["step"] = 1
+    t2 = ck.save(state)
+    ck.branch("ft")
+    state["params"]["emb"][0] += 1
+    t3 = ck.save(state)
+    dag = ck.versions
+    assert dag.branches == {"main": t2, "ft": t3}
+    assert dag.head_branch == "ft"
+    assert dag.ancestors(t3) == [t3, t2, t1]
+    assert dag.children(t2) == [t3]
+    assert dag.merge_base("main", "ft") == t2
+    assert dag.merge_base(t1, t3) == t1
+
+    entries = ck.log("ft")
+    assert [e["time_id"] for e in entries] == [t3, t2, t1]
+    assert entries[0]["branch"] == "ft"
+    assert ck.log(limit=1)[0]["time_id"] == t3
+
+    # pod-granular diff: branches share most pods
+    d = ck.diff("main", "ft")
+    assert d.n_shared > 0 and len(d.only_b) > 0
+    assert d.bytes_shared > d.bytes_only_b
+
+
+def test_reopened_store_appends_never_overwrites(tmp_path):
+    """TimeIDs resume after the newest manifest on reopen: a second
+    process saving into an existing store must append commits, not
+    clobber commit 1 (which a per-instance counter restarting at 1 did)."""
+    rng = np.random.default_rng(15)
+    state = _mk_state(rng, rows=128)
+    ck = Chipmink(FileStore(str(tmp_path)), chunk_bytes=1 << 12)
+    t1 = ck.save(state)
+    base_step = ck.load(names={"step"}, time_id=t1)["step"]
+
+    ck2 = Chipmink(FileStore(str(tmp_path)), chunk_bytes=1 << 12)
+    fresh = _mk_state(np.random.default_rng(16), rows=128)
+    fresh["step"] = 99
+    t2 = ck2.save(fresh)
+    assert t2 == t1 + 1                               # appended
+    assert ck2.store.get_manifest(t2)["parent"] == t1  # chains to old HEAD
+    # commit 1 is untouched
+    assert ck2.load(names={"step"}, time_id=t1)["step"] == base_step
+
+
+def test_refs_persist_across_reopen(tmp_path):
+    rng = np.random.default_rng(1)
+    state = _mk_state(rng, rows=256)
+    ck = Chipmink(FileStore(str(tmp_path)), chunk_bytes=1 << 12)
+    t1 = ck.save(state)
+    ck.branch("side")
+    state["step"] = 1
+    t2 = ck.save(state)
+    ck.tag("v1", at=t1)
+
+    ck2 = Chipmink(FileStore(str(tmp_path)), chunk_bytes=1 << 12)
+    dag = ck2.versions
+    assert dag.branches == {"main": t1, "side": t2}
+    assert dag.tags == {"v1": t1}
+    assert dag.head_branch == "side"
+    assert dag.head_commit() == t2
+    # cold checkout from the reopened store works and resumes lineage
+    s = ck2.checkout("side")
+    assert s["step"] == 1
+    s["step"] = 2
+    t3 = ck2.save(s)
+    assert ck2.versions.branches["side"] == t3
+    assert ck2.store.get_manifest(t3)["parent"] == t2
+
+
+# ---------------------------------------------------------------------------
+# delta-aware checkout
+# ---------------------------------------------------------------------------
+
+def test_delta_checkout_reads_fewer_bytes_than_full_load():
+    rng = np.random.default_rng(2)
+    state = _mk_state(rng)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12)
+    ck.save(state)
+    ck.branch("a")
+    state["params"]["emb"][7] += 1
+    state["step"] = 1
+    tid_a = ck.save(state)
+    ck.checkout("main")
+    ck.branch("b")
+    sb = ck.checkout("main")
+    sb["params"]["emb"][900] += 1
+    sb["step"] = 2
+    tid_b = ck.save(sb)
+
+    # switching between siblings that share a base: the delta path must
+    # read strictly fewer pod bytes than a full load of the same commit
+    r0 = ck.store.stats.read_bytes
+    ck.checkout("a")
+    delta_bytes = ck.store.stats.read_bytes - r0
+    cs = ck.last_checkout_stats
+    assert cs.n_pods_fetched < cs.n_pods
+    assert cs.n_pods_live > 0
+
+    cold = Chipmink(MemoryStore(), chunk_bytes=1 << 12)
+    cold.store._pods = ck.store._pods          # same bytes, fresh stats
+    cold.store._manifests = ck.store._manifests
+    cold.store._meta = ck.store._meta
+    r1 = cold.store.stats.read_bytes
+    cold.load(time_id=tid_a)
+    full_bytes = cold.store.stats.read_bytes - r1
+    assert 0 < delta_bytes < full_bytes, (delta_bytes, full_bytes)
+
+
+def test_first_save_after_checkout_runs_incremental_path():
+    rng = np.random.default_rng(3)
+    state = _mk_state(rng)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12)
+    t1 = ck.save(state)
+    state["params"]["emb"][:64] += 1
+    ck.save(state)
+
+    s = ck.checkout(t1)
+    s["params"]["emb"][3] += 1
+    s["step"] = 7
+    t3 = ck.save(s)
+    st = ck.save_stats[-1]
+    assert st["n_pods_reused"] > 0, st          # incremental path engaged
+    assert st["pods_written"] < st["n_pods"] * 0.2
+    loaded = ck.load(time_id=t3)
+    assert np.array_equal(loaded["params"]["emb"], s["params"]["emb"])
+    assert loaded["step"] == 7
+
+
+def test_checkout_mutate_save_bit_identical_to_scratch():
+    """Checkout → mutate → save must be indistinguishable in pod bytes and
+    manifest content from a from-scratch save of the same state."""
+    rng = np.random.default_rng(4)
+    state = _mk_state(rng, rows=512)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12)
+    t1 = ck.save(state)
+    state["params"]["emb"][3] += 5.0
+    state["step"] = 1
+    ck.save(state)
+
+    s = ck.checkout(t1)
+    s["params"]["emb"][3] += 5.0
+    s["step"] = 1
+    t3 = ck.save(s)
+    assert ck.save_stats[-1]["n_pods_reused"] > 0
+
+    oracle = Chipmink(MemoryStore(), chunk_bytes=1 << 12)
+    to = oracle.save(s)
+    m_ck = ck.store.get_manifest(t3)
+    m_or = oracle.store.get_manifest(to)
+    assert _strip(m_ck) == _strip(m_or)
+    for meta in m_ck["pods"].values():
+        assert ck.store.get_pod(meta["d"]) == oracle.store.get_pod(meta["d"])
+
+
+def test_checkout_restores_aliases_and_reflows_like():
+    from collections import namedtuple
+    Pair = namedtuple("Pair", ["w", "b"])
+    rng = np.random.default_rng(5)
+    state = {"layer": Pair(rng.standard_normal((8, 4)).astype(np.float32),
+                           rng.standard_normal(4).astype(np.float32)),
+             "step": 3}
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 10)
+    t = ck.save(state)
+    out = ck.checkout(t, like=state)
+    assert isinstance(out["layer"], Pair)
+    assert np.array_equal(out["layer"].w, state["layer"].w)
+    # restored arrays are writable (training can continue in place)
+    out["layer"].w[0] += 1.0
+
+    rng = np.random.default_rng(6)
+    tied = _mk_state(rng, rows=128)
+    ck2 = Chipmink(MemoryStore(), chunk_bytes=1 << 12)
+    t2 = ck2.save(tied)
+    s = ck2.checkout(t2)
+    assert s["params"]["tied"] is s["params"]["emb"]   # alias survives
+
+
+def test_checkout_legacy_manifest_without_chunk_table():
+    """Pre-versioning manifests (no "chunks" field) fall back to one
+    batched re-fingerprint pass and still prime the incremental path."""
+    rng = np.random.default_rng(7)
+    state = _mk_state(rng, rows=256)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12)
+    t1 = ck.save(state)
+    m = ck.store.get_manifest(t1)
+    del m["chunks"]
+    ck.store.put_manifest(t1, m)
+
+    ck2 = Chipmink(ck.store, chunk_bytes=1 << 12)
+    s = ck2.checkout(t1)
+    assert not ck2.last_checkout_stats.digest_table_imported
+    s["params"]["emb"][0] += 1
+    ck2.save(s)
+    st = ck2.save_stats[-1]
+    assert st["n_pods_reused"] > 0
+    assert st["pods_written"] < st["n_pods"] * 0.2
+
+
+# ---------------------------------------------------------------------------
+# mark-and-sweep GC
+# ---------------------------------------------------------------------------
+
+def test_gc_reclaims_unreachable_and_preserves_survivors():
+    rng = np.random.default_rng(8)
+    state = _mk_state(rng)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12)
+    t1 = ck.save(state)
+    ck.branch("junk")
+    state["params"]["emb"][:] += 1.0
+    state["step"] = 1
+    ck.save(state)
+    state["params"]["emb"][:] += 1.0
+    state["step"] = 2
+    ck.save(state)
+    base = ck.checkout("main")
+    ck.versions.delete_branch("junk")
+
+    dry = ck.gc(dry_run=True)
+    assert dry.n_pods_deleted > 0 and dry.n_commits_deleted == 2
+    assert ck.store.list_time_ids() != [t1]            # dry run deleted nothing
+    total0 = ck.store.total_bytes()
+    real = ck.gc()
+    # dry-run byte estimate matches the actual reclaim exactly
+    assert real.bytes_reclaimed == dry.bytes_reclaimed > 0
+    assert total0 - ck.store.total_bytes() == real.bytes_reclaimed
+    assert ck.store.list_time_ids() == [t1]
+
+    # every surviving commit still checks out bit-for-bit
+    s = ck.checkout(t1)
+    assert np.array_equal(s["params"]["emb"], base["params"]["emb"])
+    # every surviving manifest's pods exist
+    for meta in ck.store.get_manifest(t1)["pods"].values():
+        assert ck.store.has_pod(meta["d"])
+
+
+def test_gc_keeps_pods_shared_with_live_branch():
+    rng = np.random.default_rng(9)
+    state = _mk_state(rng)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12)
+    ck.save(state)
+    ck.branch("dead")
+    state["params"]["emb"][5] += 1          # tiny delta: most pods shared
+    state["step"] = 1
+    t_dead = ck.save(state)
+    n_shared = len(ck.diff("main", "dead").shared)
+    ck.checkout("main")
+    ck.versions.delete_branch("dead")
+    ck.gc()
+    assert n_shared > 0
+    for meta in ck.store.get_manifest(ck.versions.resolve("main"))["pods"].values():
+        assert ck.store.has_pod(meta["d"])
+    with pytest.raises(KeyError):
+        ck.store.get_manifest(t_dead)
+
+
+def test_gc_during_async_save_never_drops_pending_pods():
+    rng = np.random.default_rng(10)
+    state = _mk_state(rng, rows=512)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12, async_mode=True)
+    ck.save(state)
+    ck.wait()
+    state["params"]["emb"][:] += 1.0
+    state["step"] = 1
+    t2 = ck.save(state)                      # in flight
+    stats = ck.gc()                          # quiesces, then collects
+    m = ck.store.get_manifest(t2)            # pending manifest landed
+    for meta in m["pods"].values():
+        assert ck.store.has_pod(meta["d"])
+    s = ck.checkout(t2)
+    assert np.array_equal(s["params"]["emb"], state["params"]["emb"])
+    assert stats.n_commits_deleted == 0      # everything reachable from HEAD
+
+
+def test_gc_then_resave_rewrites_pruned_pods():
+    """Thesaurus entries of swept pods must be pruned: a later save that
+    recreates identical content has to rewrite the bytes, not alias a
+    deleted blob."""
+    rng = np.random.default_rng(11)
+    state = _mk_state(rng, rows=256)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12)
+    t1 = ck.save(state)
+    ck.branch("tmp")
+    state["params"]["emb"][:] += 2.0
+    state["step"] = 1
+    ck.save(state)
+    s = ck.checkout("main")
+    ck.versions.delete_branch("tmp")
+    ck.gc()
+
+    s["params"]["emb"][:] += 2.0            # recreate the swept content
+    s["step"] = 1
+    t3 = ck.save(s)
+    m = ck.store.get_manifest(t3)
+    for meta in m["pods"].values():
+        assert ck.store.has_pod(meta["d"])
+    loaded = ck.load(time_id=t3)
+    assert np.array_equal(loaded["params"]["emb"], s["params"]["emb"])
+
+
+def test_gc_on_legacy_store_without_refs_preserves_all_commits():
+    """A pre-versioning store has manifests but no refs blob; first
+    contact must bootstrap refs rooting every tip, so gc() reclaims
+    nothing instead of sweeping the whole store."""
+    rng = np.random.default_rng(16)
+    state = _mk_state(rng, rows=128)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12)
+    t1 = ck.save(state)
+    ck.branch("side")
+    state["step"] = 1
+    t2 = ck.save(state)
+    ck.store._meta.pop("refs")               # simulate a legacy store
+
+    ck2 = Chipmink(ck.store, chunk_bytes=1 << 12)
+    dag = ck2.versions
+    assert set(dag.branches.values()) >= {t2}   # every tip rooted
+    dry = ck2.gc(dry_run=True)
+    assert dry.n_pods_deleted == 0 and dry.n_commits_deleted == 0
+    ck2.gc()
+    assert sorted(ck2.store.list_time_ids()) == [t1, t2]
+
+
+def test_failed_save_does_not_sever_lineage():
+    rng = np.random.default_rng(17)
+    state = _mk_state(rng, rows=128)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12)
+    t1 = ck.save(state)
+
+    real_detect = ck.detector.detect
+    ck.detector.detect = lambda *a, **k: (_ for _ in ()).throw(
+        RuntimeError("injected"))
+    state["step"] = 1
+    with pytest.raises(RuntimeError):
+        ck.save(state)
+    ck.detector.detect = real_detect
+
+    state["step"] = 2
+    t3 = ck.save(state)
+    # the failed TimeID is skipped, but ancestry continues from t1
+    assert ck.store.get_manifest(t3)["parent"] == t1
+    assert ck.versions.ancestors(t3) == [t3, t1]
+    assert ck.gc(dry_run=True).n_commits_deleted == 0
+
+
+def test_tag_and_log_drain_async_saves():
+    rng = np.random.default_rng(18)
+    state = _mk_state(rng, rows=128)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12, async_mode=True)
+    t1 = ck.save(state)                       # possibly still in flight
+    assert ck.tag("release") == t1            # waits, pins the new commit
+    assert ck.log()[0]["time_id"] == t1
+
+
+def test_checkout_unknown_ref_raises_uniformly():
+    rng = np.random.default_rng(19)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12)
+    ck.save(_mk_state(rng, rows=64))
+    with pytest.raises(KeyError):
+        ck.checkout(999)
+    with pytest.raises(KeyError):
+        ck.checkout("no-such-branch")
+
+
+# ---------------------------------------------------------------------------
+# copy-on-submit snapshots (async overlap, host-mutable numpy leaves)
+# ---------------------------------------------------------------------------
+
+def test_copy_on_submit_shields_small_host_leaves():
+    rng = np.random.default_rng(12)
+    state = {"c": rng.standard_normal(64).astype(np.float32), "step": 0}
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12, async_mode=True)
+    gate = threading.Event()
+    ck.saver.submit(gate.wait)               # hold the podding thread
+    snapshot = state["c"].copy()
+    t1 = ck.save(state)                      # queued behind the gate
+    state["c"][:] += 100.0                   # mutate BEFORE the body runs
+    gate.set()
+    ck.wait()
+    assert ck.save_stats[-1]["n_leaf_copies"] > 0
+    loaded = ck.load(time_id=t1)
+    assert np.array_equal(loaded["c"], snapshot)   # save-time value
+
+
+def test_copy_on_submit_respects_threshold():
+    rng = np.random.default_rng(13)
+    small = rng.standard_normal(16).astype(np.float32)      # 64 B
+    big = rng.standard_normal((1024, 64)).astype(np.float32)  # 256 KiB
+    state = {"small": small, "big": big}
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12, async_mode=True,
+                  copy_on_submit_bytes=1 << 10)
+    ck.save(state)
+    ck.wait()
+    assert ck.save_stats[-1]["n_leaf_copies"] == 1          # only `small`
+
+    off = Chipmink(MemoryStore(), chunk_bytes=1 << 12, async_mode=True,
+                   copy_on_submit_bytes=0)
+    off.save({"small": small.copy()})
+    off.wait()
+    assert off.save_stats[-1]["n_leaf_copies"] == 0
+
+    sync = Chipmink(MemoryStore(), chunk_bytes=1 << 12)
+    sync.save({"small": small.copy()})
+    assert sync.save_stats[-1]["n_leaf_copies"] == 0        # sync: no copies
+
+
+# ---------------------------------------------------------------------------
+# standalone mark_and_sweep over a hand-built DAG
+# ---------------------------------------------------------------------------
+
+def test_mark_and_sweep_extra_roots_protect_detached_commits():
+    rng = np.random.default_rng(14)
+    state = _mk_state(rng, rows=128)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12)
+    t1 = ck.save(state)
+    dag = CommitDAG(ck.store)
+    dag.branches.clear()                      # simulate: no refs at all
+    dag.head_branch = None
+    dag.detached = None
+
+    dry = mark_and_sweep(ck.store, dag, extra_roots=(t1,), dry_run=True)
+    assert dry.n_pods_deleted == 0            # extra root keeps everything
+    dry2 = mark_and_sweep(ck.store, dag, dry_run=True)
+    assert dry2.n_commits_deleted == 1        # without it, t1 is garbage
+    assert dry2.n_pods_deleted == len(ck.store.list_pods())
