@@ -1,0 +1,206 @@
+"""Crash-consistency benchmark: recovery (fsck) time and retry overhead.
+
+    PYTHONPATH=src python -m benchmarks.bench_faults [--quick]
+
+Three measurements on a FileStore under fault injection:
+
+  * **recovery** — a mutate→save history killed at each crash-matrix
+    point; wall time of the reopen fsck (quick and deep), per point, and
+    whether refs resolved to a complete commit.
+  * **retry overhead** — saves under transient put_pod/put_manifest
+    faults (absorbed by `RetryPolicy`) vs a fault-free baseline: save
+    latency p50 and retries per save.  The overhead bounds what a flaky
+    filesystem costs before anything surfaces to the caller.
+  * **fsck scaling** — quick vs deep fsck wall time on a clean store as
+    the commit count grows (deep reads every pod; quick only metadata).
+
+Rows land in ``experiments/bench/BENCH_faults.json`` for per-PR diffing;
+CI runs the --quick config as a smoke check.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "bench", "BENCH_faults.json")
+
+#: (rows, d, n_setup_saves, n_retry_saves, scaling_saves)
+FULL_CFG = (8192, 64, 6, 8, 24)
+QUICK_CFG = (1024, 32, 3, 4, 8)
+
+
+def _mk_state(rng, rows, d):
+    return {"params": {"emb": rng.standard_normal((rows, d))
+                       .astype(np.float32)},
+            "opt": {"mu": np.zeros((rows, d), np.float32)},
+            "step": 0}
+
+
+def _mutate(rng, state, i, dirty=8):
+    idx = rng.integers(0, state["params"]["emb"].shape[0], size=dirty)
+    state["params"]["emb"][idx] += 1e-2
+    state["opt"]["mu"][idx] += 1e-3
+    state["step"] = i
+    return state
+
+
+def _grow(ck, rng, state, n, start=0):
+    tids = []
+    for i in range(start, start + n):
+        _mutate(rng, state, i)
+        tids.append(ck.save(state))
+    return tids
+
+
+def bench_faults(quick: bool = False) -> List[Dict]:
+    from repro.core import (Chipmink, FaultyStore, FileStore, InjectedCrash,
+                            RetryPolicy, crash_matrix_points)
+    from repro.version import fsck
+
+    cfg = QUICK_CFG if quick else FULL_CFG
+    rows, d, n_setup, n_retry, n_scale = cfg
+    rows_out: List[Dict] = []
+    work = tempfile.mkdtemp(prefix="bench_faults_")
+    try:
+        # -- recovery time per crash-matrix point ------------------------
+        per_point: List[Dict] = []
+        for point, flavor in crash_matrix_points():
+            root = os.path.join(work, f"{point}-{flavor}")
+            fs = FaultyStore(FileStore(root))
+            ck = Chipmink(store=fs, use_kernel=False, fsck_on_open=False)
+            rng = np.random.default_rng(0)
+            state = _mk_state(rng, rows, d)
+            tids = _grow(ck, rng, state, n_setup)
+            fs.clear()
+            fs.arm(point, flavor)
+            _mutate(rng, state, n_setup)
+            try:
+                ck.save(state)
+            except InjectedCrash:
+                pass
+            t0 = time.perf_counter()
+            rep_q = fsck(FileStore(root))
+            t_quick = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            rep_d = fsck(FileStore(root), deep=True)
+            t_deep = time.perf_counter() - t0
+            ck2 = Chipmink(store=FileStore(root), use_kernel=False,
+                           fsck_on_open=False)
+            head = ck2.versions.head_commit()
+            per_point.append({
+                "point": f"{point}/{flavor}",
+                "fsck_quick_ms": round(t_quick * 1e3, 3),
+                "fsck_deep_ms": round(t_deep * 1e3, 3),
+                "head_complete": bool(head is not None
+                                      and head not in rep_d.incomplete
+                                      and head >= tids[-1]),
+                "repaired": bool(not rep_q.clean or not rep_d.clean),
+            })
+        rows_out.append({
+            "bench": "faults", "workload": "recovery",
+            "n_points": len(per_point),
+            "all_heads_complete": bool(all(p["head_complete"]
+                                           for p in per_point)),
+            "fsck_quick_ms_p50": round(float(np.median(
+                [p["fsck_quick_ms"] for p in per_point])), 3),
+            "fsck_deep_ms_p50": round(float(np.median(
+                [p["fsck_deep_ms"] for p in per_point])), 3),
+            "per_point": per_point,
+        })
+
+        # -- retry overhead ----------------------------------------------
+        def run_saves(faulty: bool) -> Dict:
+            root = os.path.join(work, "retry-faulty" if faulty
+                                else "retry-clean")
+            fs = FaultyStore(FileStore(root))
+            ck = Chipmink(store=fs, use_kernel=False, fsck_on_open=False,
+                          retry_policy=RetryPolicy(backoff_s=0.0005))
+            rng = np.random.default_rng(1)
+            state = _mk_state(rng, rows, d)
+            ck.save(state)                     # cold first save excluded
+            lat: List[float] = []
+            retries = 0
+            for i in range(n_retry):
+                if faulty:
+                    fs.transient("put_pod", times=1,
+                                 skip=fs.calls.get("put_pod", 0))
+                    fs.transient("put_manifest", times=1,
+                                 skip=fs.calls.get("put_manifest", 0))
+                _mutate(rng, state, i + 1)
+                t0 = time.perf_counter()
+                ck.save(state)
+                lat.append((time.perf_counter() - t0) * 1e3)
+                retries += ck.save_stats[-1]["n_retries"]
+            return {"save_ms_p50": round(float(np.median(lat)), 3),
+                    "n_retries": retries}
+
+        clean = run_saves(False)
+        faulty = run_saves(True)
+        rows_out.append({
+            "bench": "faults", "workload": "retry_overhead",
+            "n_saves": n_retry,
+            "clean_save_ms_p50": clean["save_ms_p50"],
+            "faulty_save_ms_p50": faulty["save_ms_p50"],
+            "retry_overhead_x": round(
+                faulty["save_ms_p50"] / max(clean["save_ms_p50"], 1e-9), 2),
+            "retries_total": faulty["n_retries"],
+            "clean_retries_total": clean["n_retries"],
+            "all_faulty_saves_succeeded": True,   # run_saves would raise
+        })
+
+        # -- fsck scaling with history length ----------------------------
+        root = os.path.join(work, "scaling")
+        ck = Chipmink(store=FileStore(root), use_kernel=False,
+                      fsck_on_open=False)
+        rng = np.random.default_rng(2)
+        state = _mk_state(rng, rows, d)
+        _grow(ck, rng, state, n_scale)
+        t0 = time.perf_counter()
+        rep = fsck(FileStore(root))
+        t_quick = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        fsck(FileStore(root), deep=True)
+        t_deep = time.perf_counter() - t0
+        rows_out.append({
+            "bench": "faults", "workload": "fsck_scaling",
+            "n_commits": n_scale,
+            "clean": bool(rep.clean),
+            "fsck_quick_ms": round(t_quick * 1e3, 3),
+            "fsck_deep_ms": round(t_deep * 1e3, 3),
+            "quick_ms_per_commit": round(t_quick * 1e3 / n_scale, 4),
+        })
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+    os.makedirs(os.path.dirname(OUT_JSON), exist_ok=True)
+    payload = {
+        "config": {"rows": rows, "d": d, "n_setup_saves": n_setup,
+                   "n_retry_saves": n_retry, "scaling_saves": n_scale,
+                   "quick": quick},
+        "summary": rows_out,
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return rows_out
+
+
+def main() -> None:
+    import argparse
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="small config for CI smoke runs")
+    args = p.parse_args()
+    for row in bench_faults(quick=args.quick):
+        out = {k: v for k, v in row.items() if k != "per_point"}
+        print(",".join(f"{k}={v}" for k, v in out.items()))
+
+
+if __name__ == "__main__":
+    main()

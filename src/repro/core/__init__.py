@@ -8,8 +8,13 @@ Public API:
     LGA, BundleAll, SplitAll, RandomPolicy, TbH, lga0, lga1
     build_graph, pod_graph
     MemoryStore, FileStore
+    FaultyStore, InjectedCrash, RetryPolicy — fault injection + retry
+                        policy for the crash-consistency story
 """
+from .async_saver import AsyncSaveError, AsyncSaver
 from .checkpoint import Chipmink, TimeID, reflow
+from .faults import (Fault, FaultyStore, InjectedCrash, RetryPolicy,
+                     call_with_retries, crash_matrix_points)
 from .graph import ObjectGraph, build_graph, chunk_grid, rebuild_tree
 from .graph_cache import GraphCache, IncrementalBuildInfo
 from .lga import (BUNDLE, SPLIT_CONTINUE, SPLIT_FINAL, BundleAll, LGA,

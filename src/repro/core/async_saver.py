@@ -27,12 +27,36 @@ what keeps the cross-save state (digest table, previous PodAssignment,
 thesaurus) free of write races; the caller-side snapshot (graph build at
 ``save()`` call time) is what makes the overlap sound — see the
 "Incremental save pipeline" contract in ``checkpoint.py``.
+
+Degraded mode: a failed body does not stop the pipeline — later queued
+saves still run (a transient fault should cost one checkpoint, not all
+of them).  Every failure is kept: the pending list re-raises on the next
+``wait()``/``submit()`` (one error as itself, several combined into
+`AsyncSaveError`), and the cumulative ``n_failed`` counter survives the
+drain so supervision code can account for absorbed failures.
 """
 from __future__ import annotations
 
 import threading
 from collections import deque
-from typing import Any, Callable, Deque, Optional
+from typing import Any, Callable, Deque, List, Optional
+
+
+class AsyncSaveError(RuntimeError):
+    """More than one queued save body failed before the caller checked.
+
+    Degraded mode: the pipeline keeps draining after a failure (later
+    saves may well succeed — e.g. a transient disk error), so by the time
+    `wait()`/`submit()` surfaces the problem several bodies may have
+    failed.  Every underlying error is kept in ``errors``; the message
+    summarizes them.  A single failure re-raises the original exception
+    unchanged (type-stable for callers matching on it).
+    """
+
+    def __init__(self, errors: List[BaseException]) -> None:
+        self.errors = list(errors)
+        msg = "; ".join(f"{type(e).__name__}: {e}" for e in self.errors)
+        super().__init__(f"{len(self.errors)} async saves failed: {msg}")
 
 
 class AsyncSaver:
@@ -44,24 +68,43 @@ class AsyncSaver:
         self._queue: Deque[Callable[[], Any]] = deque()
         self._inflight = 0                  # queued + running
         self._worker: Optional[threading.Thread] = None
-        self._error: Optional[BaseException] = None
+        self._errors: List[BaseException] = []
         # contract counters (read by benchmarks/stats)
         self.n_submits = 0
         self.n_stalls = 0      # submit blocked on a full pipeline
         self.n_overlapped = 0  # submit returned while a save was in flight
+        #: cumulative count of failed save bodies.  Unlike the pending
+        #: error list (drained by the raise on wait()/submit()), this
+        #: never resets: a caller that absorbed an error once can still
+        #: see that failures happened (degraded-mode accounting).
+        self.n_failed = 0
 
     @property
     def busy(self) -> bool:
         with self._cv:
             return self._inflight > 0
 
+    def _drain_errors_locked(self) -> Optional[BaseException]:
+        """Pop every pending error as one raisable (caller holds _cv).
+
+        One failure re-raises the original exception; several combine
+        into an `AsyncSaveError` so no secondary failure is ever lost.
+        `n_failed` is NOT reset — it is the cumulative record."""
+        if not self._errors:
+            return None
+        errs, self._errors = self._errors, []
+        if len(errs) == 1:
+            return errs[0]
+        return AsyncSaveError(errs)
+
     def wait(self) -> None:
-        """Join every in-flight save (and re-raise the first error, if any)."""
+        """Join every in-flight save (and re-raise the pending errors —
+        combined into `AsyncSaveError` when more than one body failed)."""
         with self._cv:
             while self._inflight > 0:
                 self._cv.wait()
-            if self._error is not None:
-                err, self._error = self._error, None
+            err = self._drain_errors_locked()
+            if err is not None:
                 raise err
 
     def submit(self, fn: Callable[[], Any]) -> None:
@@ -69,13 +112,14 @@ class AsyncSaver:
         fewer than `depth` saves are in flight; otherwise blocks until the
         oldest save retires (backpressure, counted in `n_stalls`).
 
-        A previously failed save surfaces here (as it did when submit
-        joined the prior thread): the pending error is re-raised and `fn`
-        is NOT enqueued, so a loop that only ever calls save() cannot run
-        forever on silently missing checkpoints."""
+        Previously failed saves surface here (as they did when submit
+        joined the prior thread): the pending errors re-raise (combined
+        when several bodies failed) and `fn` is NOT enqueued, so a loop
+        that only ever calls save() cannot run forever on silently
+        missing checkpoints."""
         with self._cv:
-            if self._error is not None:
-                err, self._error = self._error, None
+            err = self._drain_errors_locked()
+            if err is not None:
                 raise err
             self.n_submits += 1
             if self._inflight > 0:
@@ -104,10 +148,10 @@ class AsyncSaver:
             try:
                 with self.l_active:
                     fn()
-            except BaseException as e:  # surfaced on next wait()
+            except BaseException as e:  # surfaced on next wait()/submit()
                 with self._cv:
-                    if self._error is None:
-                        self._error = e
+                    self._errors.append(e)
+                    self.n_failed += 1
             finally:
                 with self._cv:
                     self._inflight -= 1

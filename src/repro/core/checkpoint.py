@@ -76,6 +76,42 @@ so in-place mutation of small host state (counters, cursors, norm stats)
 before ``wait()`` can no longer corrupt an in-flight save.  Larger numpy
 leaves keep the must-not-mutate-before-wait rule; jax.Arrays were always
 immune.
+
+Durability & recovery contract
+------------------------------
+Every save is a transaction with a strictly ordered commit protocol:
+
+  1. **pods** — content-addressed payload blobs.  Each is written
+     tmp-file + atomic rename on the file backend; a crash mid-pod
+     leaves only a ``.tmp`` orphan, never a half blob at a live address.
+  2. **manifest** — one atomic write naming every pod digest.  This is
+     the commit point for the *data*: once the manifest exists and all
+     its pods exist, the commit is complete and loadable.
+  3. **refs** — the commit DAG advances HEAD/branch via compare-and-swap
+     on the refs meta blob (`BaseStore.compare_and_put_meta`).  This is
+     the commit point for *visibility*; concurrent writers rebase and
+     retry on conflict, so no mutation is ever silently clobbered.
+
+A crash between any two steps leaves the store recoverable: debris from
+step 1 is invisible (content addressing dedups or ignores it), a
+dangling step-2 manifest is unreachable until GC sweeps it, and refs
+always name a commit that finished step 2.  ``fsck_on_open`` (default
+True) runs `repro.version.fsck` before the first save of a reopened
+store: it classifies torn saves, rolls refs back to the newest complete
+commit, sweeps debris, and — pass ``fsck_on_open="deep"`` — validates
+every pod byte-level (required after a crash on a backend without
+atomic renames, since a torn pod squats on a content address future
+saves would dedup against).  `Chipmink.fsck()` reruns it on demand,
+pruning swept digests from the thesaurus.
+
+Transient I/O faults (`OSError`) in the write phase retry with
+exponential backoff under ``retry_policy`` (default: 3 retries); the
+per-save retry count lands in ``save_stats[-1]["n_retries"]``.  The
+write → manifest → refs steps are individually idempotent, so a retried
+step never double-applies.  Durability on the file backend is opt-in:
+``FileStore(root, fsync=True)`` fsyncs data + directory around every
+rename (the paper's workloads prefer throughput; crash-*consistency* —
+never serving a torn commit — holds either way).
 """
 from __future__ import annotations
 
@@ -88,6 +124,7 @@ import numpy as np
 from .active_filter import ActiveVariableFilter
 from .async_saver import AsyncSaver
 from .change_detector import ChangeDetector, pack_digest_table
+from .faults import RetryPolicy, call_with_retries
 from .graph import ObjectGraph, build_graph, rebuild_tree
 from .graph_cache import GraphCache, IncrementalBuildInfo
 from .lga import LGA, PoddingPolicy
@@ -119,6 +156,8 @@ class Chipmink:
         track_flips: bool = True,
         copy_on_submit_bytes: int = 1 << 20,
         seed: int = 0,
+        retry_policy: Optional[RetryPolicy] = None,
+        fsck_on_open: Any = True,
     ) -> None:
         self.store = store if store is not None else MemoryStore()
         self.policy = policy if policy is not None else LGA()
@@ -140,6 +179,17 @@ class Chipmink:
         self._prev_pods: Optional[PodAssignment] = None
         self._prev_graph: Optional[ObjectGraph] = None
         self._pod_digests: Dict[int, bytes] = {}   # prev save's pod digests
+        self.retry_policy = (retry_policy if retry_policy is not None
+                             else RetryPolicy())
+        # Recovery scan before anything reads the store: a previous
+        # process may have died mid-transaction.  True = quick (existence
+        # + non-empty of every referenced pod); "deep" additionally
+        # validates every pod's bytes — see the durability contract above.
+        self.last_fsck = None
+        if fsck_on_open:
+            from ..version import fsck as _fsck
+            self.last_fsck = _fsck(self.store,
+                                   deep=(fsck_on_open == "deep"))
         # Resume TimeIDs after the store's newest manifest: a reopened
         # store must append commits, never overwrite them (TimeIDs are
         # namespace-global, not per-process).
@@ -382,20 +432,32 @@ class Chipmink:
         # Thesaurus/store mutation is serialized under the namespace lock,
         # taken per pod so serialization itself never blocks concurrent
         # readers (save bodies are FIFO already; l_ns shields readers).
+        # Each store write retries transient I/O errors with backoff
+        # (retry_policy); puts are idempotent — a pod is content-addressed
+        # and the rename is atomic — so a retried step never double-
+        # applies.  InjectedCrash (BaseException) punches through.
         t0 = _time.perf_counter()
+        n_retries = 0
         for pod, dig_hex, digest in to_write:
             data = serialize_pod(pod, graph, asg, chunk_bytes_of)
-            with self.saver.l_ns:
-                if self.enable_cd:
-                    if self.store.put_pod(dig_hex, data):
-                        written += 1
-                    else:
-                        aliased += 1          # disk-level synonym
-                    self.thesaurus.insert(digest, dig_hex)
-                else:
+
+            def put_one(dig_hex=dig_hex, data=data, digest=digest) -> bool:
+                with self.saver.l_ns:
+                    if self.enable_cd:
+                        fresh = self.store.put_pod(dig_hex, data)
+                        self.thesaurus.insert(digest, dig_hex)
+                        return fresh
                     self.store.put_pod(dig_hex, data)
-                    written += 1
+                    return True
+
+            fresh, nr = call_with_retries(put_one, self.retry_policy)
+            n_retries += nr
+            if fresh:
+                written += 1
+            else:
+                aliased += 1              # disk-level synonym
         stats["t_write"] = _time.perf_counter() - t0
+        stats["n_retries"] = n_retries
         stats["pods_written"] = written
         stats["pods_aliased"] = aliased
         stats["bytes_written"] = self.store.total_bytes() - bytes_before
@@ -412,11 +474,17 @@ class Chipmink:
             "stats": {k: v for k, v in stats.items()
                       if isinstance(v, (int, float, str))},
         }
-        with self.saver.l_ns:
-            self.store.put_manifest(time_id, manifest)
-            # the manifest put is the commit point; the DAG ref advance
-            # rides the same lock so readers see them move together.
-            self.versions.record(time_id, parent)
+        def commit() -> None:
+            with self.saver.l_ns:
+                # the manifest put is the data commit point; the refs CAS
+                # in record() is the visibility commit point.  Both are
+                # idempotent (atomic rename; CAS rebases), so the pair is
+                # safe to retry as a unit on transient I/O errors.
+                self.store.put_manifest(time_id, manifest)
+                self.versions.record(time_id, parent)
+
+        _, nr = call_with_retries(commit, self.retry_policy)
+        stats["n_retries"] = n_retries + nr
         self._prev_pods = asg
         self._prev_graph = graph
         self.save_stats.append(stats)
@@ -535,6 +603,32 @@ class Chipmink:
             if not dry_run and stats.deleted_pod_digests:
                 self.thesaurus.prune(stats.deleted_pod_digests)
         return stats
+
+    def fsck(self, *, deep: bool = False, repair: bool = True):
+        """Recovery scan (see the durability contract above): classify
+        torn saves, roll refs back to the newest complete commit, sweep
+        debris.  Drains in-flight saves first; afterwards the in-memory
+        DAG and HEAD are re-synced to the repaired refs, and swept pod
+        digests are pruned from the thesaurus so a future save rewrites
+        — not aliases — them.  Returns the `FsckReport` (also kept in
+        ``self.last_fsck``)."""
+        self.wait()
+        from ..version import fsck as _fsck
+        with self.saver.l_ns:
+            report = _fsck(self.store, deep=deep, repair=repair)
+            if report.swept_pod_digests:
+                self.thesaurus.prune(report.swept_pod_digests)
+            if repair:
+                self.versions.reload()
+                self._head = self.versions.head_commit()
+                # a swept torn save may have consumed TimeIDs; never
+                # reissue one below an existing manifest.
+                existing = self.store.list_time_ids()
+                if existing:
+                    self._next_time = max(self._next_time,
+                                          existing[-1] + 1)
+        self.last_fsck = report
+        return report
 
 
 def reflow(like: Any, loaded: Dict[str, Any]) -> Any:

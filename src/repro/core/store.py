@@ -12,11 +12,27 @@ Both support enumeration (`list_pods`, `list_time_ids`) and deletion
 (`delete_pod`, `delete_manifest`) — the substrate of mark-and-sweep GC
 (version/gc.py) — plus small named metadata blobs (`put_meta`/`get_meta`)
 used by the version manager to persist branch refs, tags, and HEAD.
+
+Crash consistency
+-----------------
+Every write on the file backend is tmp + `os.replace`, so a crash leaves
+an object either fully present or fully absent — never truncated — plus
+at most one orphan ``.tmp`` file (debris that `sweep_tmp` / fsck removes).
+The metadata blobs additionally support `compare_and_put_meta`, an atomic
+compare-and-swap keyed on the blob's previous bytes: the primitive the
+commit DAG uses to advance refs so a concurrent writer or a GC sweeper
+can never silently clobber them (see version/commit_graph.py and
+version/fsck.py for the full commit protocol: pods → manifest → refs).
+``FileStore(fsync=True)`` upgrades atomicity to durability: file contents
+and the containing directory entry are fsynced before the rename is
+considered landed (slower; for stores that must survive power loss, not
+just process death).
 """
 from __future__ import annotations
 
 import os
 import threading
+import time
 import zlib
 from typing import Any, Dict, Iterable, List, Optional
 
@@ -48,6 +64,9 @@ class StoreStats:
         self.pod_bytes_deleted = 0
         self.manifests_deleted = 0
         self.manifest_bytes_deleted = 0
+        # meta CAS counters (refs commit protocol)
+        self.meta_cas_ok = 0
+        self.meta_cas_conflicts = 0
 
     def as_dict(self) -> Dict[str, Any]:
         return dict(self.__dict__)
@@ -75,7 +94,14 @@ class BaseStore:
         raise NotImplementedError
 
     def pod_nbytes(self, digest_hex: str) -> int:
-        """Stored (possibly compressed) size of one pod, 0 if absent."""
+        """Stored (possibly compressed) size of one pod.
+
+        Raises `FileNotFoundError` when the pod is absent: a pod can
+        legitimately be empty (0 bytes means a torn write — serialized
+        pods are never empty) but never silently missing.  Callers that
+        used to rely on 0-on-missing masked torn stores; fsck reports
+        missing and empty pods separately (version/fsck.py).
+        """
         raise NotImplementedError
 
     def _delete_raw(self, digest_hex: str) -> None:
@@ -135,17 +161,28 @@ class BaseStore:
         return blob
 
     # -- manifests ----------------------------------------------------------
-    def put_manifest(self, time_id: int, manifest: Dict[str, Any]) -> None:
+    def _put_manifest_raw(self, time_id: int, blob: bytes) -> None:
         raise NotImplementedError
 
-    def get_manifest(self, time_id: int) -> Dict[str, Any]:
+    def _get_manifest_raw(self, time_id: int) -> bytes:
         raise NotImplementedError
+
+    def put_manifest(self, time_id: int, manifest: Dict[str, Any]) -> None:
+        blob = msgpack.packb(manifest, use_bin_type=True)
+        with self._lock:
+            self._put_manifest_raw(time_id, blob)
+            self.stats.manifest_bytes += len(blob)
+
+    def get_manifest(self, time_id: int) -> Dict[str, Any]:
+        return msgpack.unpackb(self._get_manifest_raw(time_id), raw=False,
+                               strict_map_key=False)
 
     def list_time_ids(self) -> List[int]:
         raise NotImplementedError
 
     def manifest_nbytes(self, time_id: int) -> int:
-        """Stored size of one manifest, 0 if absent."""
+        """Stored size of one manifest; raises `FileNotFoundError` when
+        absent (same missing-vs-empty contract as `pod_nbytes`)."""
         raise NotImplementedError
 
     def delete_manifest(self, time_id: int) -> int:
@@ -158,6 +195,33 @@ class BaseStore:
 
     def get_meta(self, key: str) -> Optional[bytes]:
         raise NotImplementedError
+
+    def compare_and_put_meta(self, key: str, expected_old: Optional[bytes],
+                             new: bytes) -> bool:
+        """Atomic compare-and-swap on a metadata blob.
+
+        Writes `new` iff the blob currently stored under `key` is
+        byte-identical to `expected_old` (`None` = the key must not exist
+        yet).  Returns True on success, False on conflict — the caller
+        must re-read, rebase its change, and retry (version/commit_graph
+        does exactly that for refs).  This is the primitive that makes
+        refs safe against concurrent writers and GC sweepers, and the
+        prerequisite for the multi-host coordinator commit (ROADMAP).
+        """
+        raise NotImplementedError
+
+    # -- transaction debris -------------------------------------------------
+    def sweep_tmp(self) -> int:
+        """Remove write-transaction debris (orphan ``.tmp`` / stale
+        ``.lock`` files left by a crash mid-write).  Returns the number of
+        files removed; backends without such debris return 0.  Safe only
+        when no writer is concurrently active (fsck's contract)."""
+        return 0
+
+    def repair_head(self) -> bool:
+        """Rebuild the backend's legacy HEAD pointer (if it keeps one)
+        from the manifests actually present; True if anything changed."""
+        return False
 
     def total_bytes(self) -> int:
         """Current logical footprint: bytes written minus bytes reclaimed."""
@@ -173,6 +237,7 @@ class MemoryStore(BaseStore):
         self._pods: Dict[str, bytes] = {}
         self._manifests: Dict[int, bytes] = {}
         self._meta: Dict[str, bytes] = {}
+        self._meta_lock = threading.Lock()
 
     def has_pod(self, digest_hex: str) -> bool:
         return digest_hex in self._pods
@@ -188,23 +253,24 @@ class MemoryStore(BaseStore):
 
     def pod_nbytes(self, digest_hex: str) -> int:
         blob = self._pods.get(digest_hex)
-        return len(blob) if blob is not None else 0
+        if blob is None:
+            raise FileNotFoundError(f"pod {digest_hex} not in store")
+        return len(blob)
 
     def _delete_raw(self, digest_hex: str) -> None:
         del self._pods[digest_hex]
 
-    def put_manifest(self, time_id: int, manifest: Dict[str, Any]) -> None:
-        blob = msgpack.packb(manifest, use_bin_type=True)
+    def _put_manifest_raw(self, time_id: int, blob: bytes) -> None:
         self._manifests[time_id] = blob
-        self.stats.manifest_bytes += len(blob)
 
-    def get_manifest(self, time_id: int) -> Dict[str, Any]:
-        return msgpack.unpackb(self._manifests[time_id], raw=False,
-                               strict_map_key=False)
+    def _get_manifest_raw(self, time_id: int) -> bytes:
+        return self._manifests[time_id]
 
     def manifest_nbytes(self, time_id: int) -> int:
         blob = self._manifests.get(time_id)
-        return len(blob) if blob is not None else 0
+        if blob is None:
+            raise FileNotFoundError(f"manifest {time_id} not in store")
+        return len(blob)
 
     def delete_manifest(self, time_id: int) -> int:
         blob = self._manifests.pop(time_id, None)
@@ -215,25 +281,66 @@ class MemoryStore(BaseStore):
         return len(blob)
 
     def put_meta(self, key: str, data: bytes) -> None:
-        self._meta[key] = data
+        with self._meta_lock:
+            self._meta[key] = data
 
     def get_meta(self, key: str) -> Optional[bytes]:
         return self._meta.get(key)
+
+    def compare_and_put_meta(self, key: str, expected_old: Optional[bytes],
+                             new: bytes) -> bool:
+        with self._meta_lock:
+            if self._meta.get(key) != expected_old:
+                self.stats.meta_cas_conflicts += 1
+                return False
+            self._meta[key] = new
+            self.stats.meta_cas_ok += 1
+            return True
 
     def list_time_ids(self) -> List[int]:
         return sorted(self._manifests)
 
 
 class FileStore(BaseStore):
-    """store_dir/pods/<d0d1>/<digest>.pod  +  store_dir/manifests/<tid>.mp"""
+    """store_dir/pods/<d0d1>/<digest>.pod  +  store_dir/manifests/<tid>.mp
 
-    def __init__(self, root: str, compress: bool = False) -> None:
+    With ``fsync=True`` every atomic write also fsyncs the file contents
+    and the containing directory before it counts as landed (durability
+    against power loss, not just process death).  `compare_and_put_meta`
+    serializes cross-process via an O_EXCL ``.lock`` file next to the
+    blob; a lock abandoned by a crashed process is debris that
+    `sweep_tmp` (and therefore fsck) clears.
+    """
+
+    #: how long compare_and_put_meta spins on another process's lock
+    #: before declaring it stale/stuck.
+    LOCK_TIMEOUT_S = 5.0
+
+    def __init__(self, root: str, compress: bool = False,
+                 fsync: bool = False) -> None:
         super().__init__()
         self.root = root
         self.compress = compress
+        self.fsync = fsync
         os.makedirs(os.path.join(root, "pods"), exist_ok=True)
         os.makedirs(os.path.join(root, "manifests"), exist_ok=True)
         os.makedirs(os.path.join(root, "meta"), exist_ok=True)
+
+    # -- atomic write primitive -------------------------------------------
+    def _write_atomic(self, path: str, data: bytes) -> None:
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+            if self.fsync:
+                f.flush()
+                os.fsync(f.fileno())
+        os.replace(tmp, path)  # atomic: crash-safe (fault tolerance)
+        if self.fsync:
+            dfd = os.open(os.path.dirname(path), os.O_RDONLY)
+            try:
+                os.fsync(dfd)
+            finally:
+                os.close(dfd)
 
     def _pod_path(self, digest_hex: str) -> str:
         d = os.path.join(self.root, "pods", digest_hex[:2])
@@ -245,10 +352,7 @@ class FileStore(BaseStore):
     def _put_raw(self, digest_hex: str, data: bytes) -> None:
         path = self._pod_path(digest_hex)
         os.makedirs(os.path.dirname(path), exist_ok=True)
-        tmp = path + ".tmp"
-        with open(tmp, "wb") as f:
-            f.write(data)
-        os.replace(tmp, path)  # atomic: crash-safe (fault tolerance)
+        self._write_atomic(path, data)
 
     def _get_raw(self, digest_hex: str) -> bytes:
         with open(self._pod_path(digest_hex), "rb") as f:
@@ -267,10 +371,7 @@ class FileStore(BaseStore):
         return out
 
     def pod_nbytes(self, digest_hex: str) -> int:
-        try:
-            return os.path.getsize(self._pod_path(digest_hex))
-        except FileNotFoundError:
-            return 0
+        return os.path.getsize(self._pod_path(digest_hex))
 
     def _delete_raw(self, digest_hex: str) -> None:
         # single unlink: atomic at the filesystem level, so a crash either
@@ -283,25 +384,22 @@ class FileStore(BaseStore):
     def _manifest_path(self, time_id: int) -> str:
         return os.path.join(self.root, "manifests", f"{time_id:08d}.mp")
 
-    def put_manifest(self, time_id: int, manifest: Dict[str, Any]) -> None:
-        blob = msgpack.packb(manifest, use_bin_type=True)
-        tmp = self._manifest_path(time_id) + ".tmp"
-        with open(tmp, "wb") as f:
-            f.write(blob)
-        os.replace(tmp, self._manifest_path(time_id))
-        with open(os.path.join(self.root, "HEAD"), "w") as f:
-            f.write(str(time_id))
-        self.stats.manifest_bytes += len(blob)
+    def _head_path(self) -> str:
+        return os.path.join(self.root, "HEAD")
 
-    def get_manifest(self, time_id: int) -> Dict[str, Any]:
+    def _put_manifest_raw(self, time_id: int, blob: bytes) -> None:
+        self._write_atomic(self._manifest_path(time_id), blob)
+        # legacy HEAD file rides the same atomic-rename discipline: a
+        # crash between the two writes leaves HEAD one commit behind,
+        # never torn (head() tolerates both staleness and corruption).
+        self._write_atomic(self._head_path(), str(time_id).encode())
+
+    def _get_manifest_raw(self, time_id: int) -> bytes:
         with open(self._manifest_path(time_id), "rb") as f:
-            return msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
+            return f.read()
 
     def manifest_nbytes(self, time_id: int) -> int:
-        try:
-            return os.path.getsize(self._manifest_path(time_id))
-        except FileNotFoundError:
-            return 0
+        return os.path.getsize(self._manifest_path(time_id))
 
     def delete_manifest(self, time_id: int) -> int:
         path = self._manifest_path(time_id)
@@ -318,10 +416,35 @@ class FileStore(BaseStore):
         return os.path.join(self.root, "meta", key + ".mp")
 
     def put_meta(self, key: str, data: bytes) -> None:
-        tmp = self._meta_path(key) + ".tmp"
-        with open(tmp, "wb") as f:
-            f.write(data)
-        os.replace(tmp, self._meta_path(key))  # atomic, like pods/manifests
+        self._write_atomic(self._meta_path(key), data)
+
+    def compare_and_put_meta(self, key: str, expected_old: Optional[bytes],
+                             new: bytes) -> bool:
+        lock_path = self._meta_path(key) + ".lock"
+        deadline = time.monotonic() + self.LOCK_TIMEOUT_S
+        while True:
+            try:
+                fd = os.open(lock_path,
+                             os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+                break
+            except FileExistsError:
+                if time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"meta lock {lock_path} held past "
+                        f"{self.LOCK_TIMEOUT_S}s — stale lock from a "
+                        "crashed writer?  Run fsck (it sweeps .lock "
+                        "debris) or remove the file.")
+                time.sleep(0.002)
+        try:
+            if self.get_meta(key) != expected_old:
+                self.stats.meta_cas_conflicts += 1
+                return False
+            self._write_atomic(self._meta_path(key), new)
+            self.stats.meta_cas_ok += 1
+            return True
+        finally:
+            os.close(fd)
+            os.unlink(lock_path)
 
     def get_meta(self, key: str) -> Optional[bytes]:
         try:
@@ -331,11 +454,54 @@ class FileStore(BaseStore):
             return None
 
     def head(self) -> Optional[int]:
+        """Legacy HEAD pointer: newest TimeID written by `put_manifest`.
+
+        Tolerates a corrupt/empty HEAD file (a torn write from a
+        pre-atomic-HEAD writer, or bitrot) by falling back to the newest
+        manifest actually on disk — the same value an intact HEAD would
+        carry at worst one commit later.
+        """
         try:
-            with open(os.path.join(self.root, "HEAD")) as f:
+            with open(self._head_path()) as f:
                 return int(f.read().strip())
         except FileNotFoundError:
             return None
+        except (ValueError, OSError):
+            tids = self.list_time_ids()
+            return tids[-1] if tids else None
+
+    def repair_head(self) -> bool:
+        tids = self.list_time_ids()
+        want = tids[-1] if tids else None
+        try:
+            with open(self._head_path()) as f:
+                have: Optional[int] = int(f.read().strip())
+        except FileNotFoundError:
+            have = None
+        except (ValueError, OSError):
+            have = -1  # corrupt: always rewrite
+        if have == want:
+            return False
+        if want is None:
+            try:
+                os.remove(self._head_path())
+            except FileNotFoundError:
+                return False
+        else:
+            self._write_atomic(self._head_path(), str(want).encode())
+        return True
+
+    def sweep_tmp(self) -> int:
+        n = 0
+        for dirpath, _, files in os.walk(self.root):
+            for fn in files:
+                if fn.endswith(".tmp") or fn.endswith(".lock"):
+                    try:
+                        os.remove(os.path.join(dirpath, fn))
+                        n += 1
+                    except FileNotFoundError:
+                        pass
+        return n
 
     def list_time_ids(self) -> List[int]:
         out = []

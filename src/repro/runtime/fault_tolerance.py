@@ -91,9 +91,13 @@ class TrainingSupervisor:
     """Run a step function under checkpoint/restart supervision.
 
     * saves through Chipmink every `save_every` steps (async by default),
-    * on a step failure (injected or real), reloads the latest TimeID and
-      resumes — the data pipeline cursor is part of the saved state, so
-      the token stream realigns exactly,
+    * on a step failure (injected or real), drains the pipeline
+      (absorbing failed-save errors into ``stats["save_errors"]`` —
+      degraded mode: a broken save must not take down the restart path
+      that exists to recover from it), runs `Chipmink.fsck` so a save
+      torn by the failure is rolled back, then reloads the newest commit
+      fsck vouches for and resumes — the data pipeline cursor is part of
+      the saved state, so the token stream realigns exactly,
     * `max_restarts` bounds crash loops.
     """
 
@@ -114,7 +118,7 @@ class TrainingSupervisor:
         """`step_fn(state, i) -> state`; `make_snapshot` converts live
         state to the Chipmink namespace; `restore` converts back.
         `fail_at` injects failures at given step indices (testing)."""
-        stats = {"failures": 0, "resumed_from": []}
+        stats = {"failures": 0, "resumed_from": [], "save_errors": 0}
         i = 0
         failed_once: Set[int] = set()
         while i < n_steps:
@@ -134,9 +138,21 @@ class TrainingSupervisor:
                 self.restarts += 1
                 if self.restarts > self.max_restarts:
                     raise
-                self.ck.wait()
+                # drain the pipeline, absorbing async save failures: on
+                # the restart path a lost checkpoint costs re-done steps,
+                # not correctness (degraded mode; n_failed keeps count).
+                try:
+                    self.ck.wait()
+                except Exception:
+                    stats["save_errors"] += 1
+                # recovery scan: roll back any save the failure tore,
+                # then resume from the newest commit fsck vouches for.
+                self.ck.fsck()
+                head = self.ck.versions.head_commit()
+                self.saves = [t for t in self.saves
+                              if head is not None and t <= head]
                 if not self.saves:
-                    # nothing saved yet: restart from step 0 state
+                    # nothing (surviving) saved yet: restart from step 0
                     continue
                 loaded = self.ck.load(time_id=self.saves[-1])
                 state = restore(loaded)

@@ -11,7 +11,11 @@ Three pillars on top of `repro.core`:
                      ChangeDetector / PodAssignment so the next save runs
                      the incremental path (checkout.py)
     mark_and_sweep — GC pods and manifests unreachable from any ref, with
-                     dry-run reclaim estimates (gc.py)
+                     dry-run reclaim estimates and a refs-CAS validation
+                     between mark and sweep (gc.py)
+    fsck           — recovery scan: classify torn saves, roll refs back
+                     to the newest complete commit, sweep debris
+                     (fsck.py)
 
 `Chipmink` exposes the user surface (`branch` / `checkout` / `log` /
 `tag` / `diff` / `gc`); this package holds the mechanism.  Imports run
@@ -19,10 +23,11 @@ core→version strictly through lazy imports inside Chipmink methods, so
 the package depends on core and never the reverse at import time.
 """
 from .checkout import CheckoutStats, delta_checkout
-from .commit_graph import DEFAULT_BRANCH, CommitDAG, PodDelta
+from .commit_graph import DEFAULT_BRANCH, CommitDAG, PodDelta, RefsCASError
+from .fsck import FsckReport, fsck
 from .gc import GCStats, mark_and_sweep
 
 __all__ = [
-    "CheckoutStats", "CommitDAG", "DEFAULT_BRANCH", "GCStats", "PodDelta",
-    "delta_checkout", "mark_and_sweep",
+    "CheckoutStats", "CommitDAG", "DEFAULT_BRANCH", "FsckReport", "GCStats",
+    "PodDelta", "RefsCASError", "delta_checkout", "fsck", "mark_and_sweep",
 ]

@@ -8,8 +8,16 @@ needs (branch a fine-tune, time-travel back, fork again):
   * **refs** — named branches (a ref that advances with each save on it),
     tags (frozen refs), and HEAD (the current branch, or a detached
     TimeID).  Refs are persisted as a small msgpack blob through the
-    store's metadata interface (`put_meta("refs")`), atomically on the
-    file backend, so a reopened store resumes exactly where it left off.
+    store's metadata interface, atomically on the file backend, so a
+    reopened store resumes exactly where it left off.  Every mutation
+    lands via `compare_and_put_meta` — an atomic compare-and-swap keyed
+    on the previously observed blob — so a concurrent writer (another
+    process on the same store) or a GC sweeper can never silently
+    clobber a ref: a losing writer reloads the winner's refs, re-applies
+    its own mutation on top (refs-level rebase), and retries.  A corrupt
+    refs blob (torn write on a non-atomic backend, bitrot) is tolerated
+    by rebuilding refs from the manifests (`refs_recovered` flags it;
+    fsck reports it).
   * **lineage** — `ancestors`, `children`, `merge_base`, and `log`
     (first-parent walk, newest first), answered from a parent-pointer
     cache filled lazily from manifests.
@@ -36,8 +44,17 @@ from ..core.store import BaseStore
 
 REFS_META_KEY = "refs"
 DEFAULT_BRANCH = "main"
+#: CAS attempts before giving up on a refs mutation.  A single writer
+#: never conflicts; N writers make progress because every conflict means
+#: someone else's mutation landed (lock-free progress guarantee), so 8
+#: lost races in a row signals something pathological, not contention.
+MAX_CAS_RETRIES = 8
 
 Ref = Union[str, int]
+
+
+class RefsCASError(RuntimeError):
+    """A refs mutation kept losing the compare-and-swap race."""
 
 
 @dataclasses.dataclass
@@ -73,29 +90,56 @@ class CommitDAG:
         self.detached: Optional[int] = None
         self._parents: Dict[int, Optional[int]] = {}
         self._lock = threading.RLock()
+        #: last refs blob observed in the store — the CAS expected-old.
+        self._refs_blob: Optional[bytes] = None
+        #: set when the persisted refs blob was corrupt and refs were
+        #: rebuilt from manifests (fsck reports this condition).
+        self.refs_recovered = False
         self._load_refs()
 
     # ------------------------------------------------------------------
     # persistence
     # ------------------------------------------------------------------
     def _load_refs(self) -> None:
+        """(Re)read refs from the store; bootstrap/rebuild when the blob
+        is absent or corrupt."""
+        self.branches = {}
+        self.tags = {}
+        self.head_branch = self.default_branch
+        self.detached = None
         blob = self.store.get_meta(REFS_META_KEY)
+        self._refs_blob = blob
         if blob is None:
             self._bootstrap_refs()
             return
-        refs = msgpack.unpackb(blob, raw=False)
-        self.branches = {str(k): int(v) for k, v in refs["branches"].items()}
-        self.tags = {str(k): int(v) for k, v in refs["tags"].items()}
-        self.head_branch = refs["head_branch"]
-        self.detached = refs["detached"]
+        try:
+            refs = msgpack.unpackb(blob, raw=False)
+            branches = {str(k): int(v) for k, v in refs["branches"].items()}
+            tags = {str(k): int(v) for k, v in refs["tags"].items()}
+            head_branch = refs["head_branch"]
+            detached = refs["detached"]
+        except Exception:
+            # torn/corrupt refs blob (non-atomic backend, bitrot): the
+            # manifests are the durable truth — rebuild refs from them so
+            # every commit stays reachable.  _refs_blob keeps the corrupt
+            # bytes as the CAS base, so the rebuild replaces exactly what
+            # we read and a concurrent repair cannot be clobbered.
+            self.refs_recovered = True
+            self._bootstrap_refs()
+            return
+        self.branches = branches
+        self.tags = tags
+        self.head_branch = head_branch
+        self.detached = detached
 
     def _bootstrap_refs(self) -> None:
-        """First contact with a pre-versioning store: manifests exist but
-        no refs blob does.  Every commit must stay reachable — GC with an
-        empty mark set would otherwise sweep the entire store — so every
-        childless tip becomes a branch: the newest tip takes the default
-        branch name, the rest get ``tip-<TimeID>`` (deletable by the user
-        before a gc that should actually reclaim them)."""
+        """First contact with a pre-versioning store (or a store whose
+        refs blob was torn): manifests exist but no usable refs blob
+        does.  Every commit must stay reachable — GC with an empty mark
+        set would otherwise sweep the entire store — so every childless
+        tip becomes a branch: the newest tip takes the default branch
+        name, the rest get ``tip-<TimeID>`` (deletable by the user before
+        a gc that should actually reclaim them)."""
         tids = self.store.list_time_ids()
         if not tids:
             return
@@ -108,16 +152,56 @@ class CommitDAG:
             if t != newest:
                 self.branches[f"tip-{t}"] = t
         self.head_branch = self.default_branch
-        self._flush_refs()
+        blob = self._pack_refs()
+        if self.store.compare_and_put_meta(REFS_META_KEY, self._refs_blob,
+                                           blob):
+            self._refs_blob = blob
+        else:
+            # another opener bootstrapped first — adopt its result.
+            self._load_refs()
 
-    def _flush_refs(self) -> None:
-        blob = msgpack.packb({
+    def _pack_refs(self) -> bytes:
+        return msgpack.packb({
             "branches": self.branches,
             "tags": self.tags,
             "head_branch": self.head_branch,
             "detached": self.detached,
         }, use_bin_type=True)
-        self.store.put_meta(REFS_META_KEY, blob)
+
+    def _commit_refs(self, mutate) -> Any:
+        """Apply `mutate` (a closure over self's in-memory refs) and land
+        the result via compare-and-swap against the last observed blob.
+
+        The commit protocol's step 3 (pods → manifest → **refs**): the
+        CAS makes the ref advance atomic with respect to every other
+        writer and the GC sweeper.  On conflict the winner's refs are
+        reloaded and `mutate` re-applies on top — a refs-level rebase —
+        so no concurrent mutation is ever silently lost.  `mutate` must
+        therefore be re-runnable: validation (unknown ref, duplicate
+        branch) re-executes against the reloaded state, which is exactly
+        the semantics a lock would have given.
+        """
+        for _ in range(MAX_CAS_RETRIES):
+            out = mutate()
+            blob = self._pack_refs()
+            if blob == self._refs_blob:
+                return out                   # no-op mutation
+            if self.store.compare_and_put_meta(REFS_META_KEY,
+                                               self._refs_blob, blob):
+                self._refs_blob = blob
+                return out
+            self._load_refs()                # lost the race: rebase
+        raise RefsCASError(
+            f"refs CAS lost {MAX_CAS_RETRIES} races in a row — "
+            "a stuck writer or a livelocked store?")
+
+    def reload(self) -> None:
+        """Re-read refs and drop the parent cache.  For callers that know
+        the store changed underneath them: after fsck repaired refs, or
+        to observe another process's commits."""
+        with self._lock:
+            self._parents = {}
+            self._load_refs()
 
     def refresh(self) -> None:
         """Fill the parent cache from every manifest in the store."""
@@ -164,62 +248,69 @@ class CommitDAG:
         protects via the HEAD root).
         """
         with self._lock:
-            self._parents[time_id] = parent
-            if self.head_branch is not None:
-                self.branches[self.head_branch] = time_id
-            else:
-                self.detached = time_id
-            self._flush_refs()
+            def mut() -> None:
+                self._parents[time_id] = parent
+                if self.head_branch is not None:
+                    self.branches[self.head_branch] = time_id
+                else:
+                    self.detached = time_id
+            self._commit_refs(mut)
 
     def create_branch(self, name: str, at: Optional[Ref] = None,
                       switch: bool = True) -> int:
         with self._lock:
-            if name in self.branches:
-                raise ValueError(f"branch {name!r} already exists")
-            tid = self.resolve(at)
-            if tid is None:
-                raise ValueError("cannot branch: no commit to branch from")
-            self.branches[name] = tid
-            if switch:
-                self.head_branch = name
-                self.detached = None
-            self._flush_refs()
-            return tid
+            def mut() -> int:
+                if name in self.branches:
+                    raise ValueError(f"branch {name!r} already exists")
+                tid = self.resolve(at)
+                if tid is None:
+                    raise ValueError(
+                        "cannot branch: no commit to branch from")
+                self.branches[name] = tid
+                if switch:
+                    self.head_branch = name
+                    self.detached = None
+                return tid
+            return self._commit_refs(mut)
 
     def delete_branch(self, name: str) -> None:
         with self._lock:
-            if name == self.head_branch:
-                raise ValueError(f"cannot delete the current branch {name!r}")
-            del self.branches[name]
-            self._flush_refs()
+            def mut() -> None:
+                if name == self.head_branch:
+                    raise ValueError(
+                        f"cannot delete the current branch {name!r}")
+                del self.branches[name]
+            self._commit_refs(mut)
 
     def create_tag(self, name: str, at: Optional[Ref] = None) -> int:
         with self._lock:
-            tid = self.resolve(at)
-            if tid is None:
-                raise ValueError("cannot tag: no commit to tag")
-            self.tags[name] = tid
-            self._flush_refs()
-            return tid
+            def mut() -> int:
+                tid = self.resolve(at)
+                if tid is None:
+                    raise ValueError("cannot tag: no commit to tag")
+                self.tags[name] = tid
+                return tid
+            return self._commit_refs(mut)
 
     def delete_tag(self, name: str) -> None:
         with self._lock:
-            del self.tags[name]
-            self._flush_refs()
+            def mut() -> None:
+                del self.tags[name]
+            self._commit_refs(mut)
 
     def set_head(self, ref: Ref) -> int:
         """Move HEAD: onto a branch (by name) or detached (tag/TimeID)."""
         with self._lock:
-            if isinstance(ref, str) and ref in self.branches:
-                self.head_branch = ref
-                self.detached = None
-                tid = self.branches[ref]
-            else:
+            def mut() -> int:
+                if isinstance(ref, str) and ref in self.branches:
+                    self.head_branch = ref
+                    self.detached = None
+                    return self.branches[ref]
                 tid = self.resolve(ref)
                 self.head_branch = None
                 self.detached = tid
-            self._flush_refs()
-            return tid
+                return tid
+            return self._commit_refs(mut)
 
     # ------------------------------------------------------------------
     # lineage

@@ -1,0 +1,329 @@
+"""Recovery fsck: classify torn saves, roll refs back, sweep debris.
+
+The save commit protocol (core/checkpoint.py "Durability & recovery
+contract") is strictly ordered:
+
+    1. **pods**      — content-addressed blobs, each tmp + atomic rename
+    2. **manifest**  — atomic rename; the commit point for the *data*
+    3. **refs**      — compare-and-swap on the refs meta blob; the commit
+                       point for *visibility* (HEAD / branch tips)
+
+A crash can therefore leave, in decreasing order of likelihood:
+
+  * orphan ``.tmp`` files and fully-written pods no manifest references
+    (died in the 1→2 window) — harmless debris: content addressing means
+    a re-run save rewrites or reuses them correctly;
+  * a complete manifest no ref points at (died in the 2→3 window) — a
+    dangling commit; refs still name the previous commit, which is the
+    correct post-crash truth because the caller never saw the save
+    succeed;
+  * on *non-atomic* backends (modeled by `FaultyStore`'s torn mode) or
+    under bitrot: truncated pod / manifest / refs blobs — the dangerous
+    class, because a torn pod sits at a content address a *future* save
+    would dedup against.
+
+`fsck` classifies all of these and, with ``repair=True`` (default):
+
+  * rolls every branch/tag/HEAD that names an incomplete commit back to
+    its nearest **complete** ancestor (deleting refs with no complete
+    ancestor), written via refs CAS so a concurrent repair can't clobber;
+  * rebuilds refs entirely from manifests when the refs blob itself is
+    torn (every childless complete tip becomes a branch — the
+    `CommitDAG` bootstrap rule);
+  * sweeps incomplete manifests (manifests-first crash ordering), empty
+    and — in deep mode — corrupt pods, and all ``.tmp``/``.lock`` debris;
+  * repairs the file backend's legacy ``HEAD`` pointer.
+
+Quick mode (default) checks existence and non-emptiness of every
+referenced pod — O(store metadata), run on every `Chipmink` open.  Deep
+mode (``deep=True``) additionally reads every pod in the store and
+verifies it deserializes, which is the only way to catch a torn pod
+whose truncated bytes are non-empty; run it after an unclean shutdown on
+a backend without atomic renames, or whenever paranoia is cheap.
+
+fsck assumes no concurrent writer (it is an *open*/restart-path tool,
+like its filesystem namesake).  The refs CAS still protects it against a
+racing repair of the same store.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+import msgpack
+
+from ..core.store import BaseStore
+from .commit_graph import DEFAULT_BRANCH, REFS_META_KEY
+
+#: attempts to land the repaired refs blob via CAS before giving up.
+MAX_REPAIR_RETRIES = 4
+
+
+@dataclasses.dataclass
+class FsckReport:
+    deep: bool = False
+    repaired: bool = False
+    n_manifests: int = 0
+    n_commits_complete: int = 0
+    #: tid -> reason ("torn manifest", "missing pod <d>", "empty pod <d>",
+    #: "corrupt pod <d>")
+    incomplete: Dict[int, str] = dataclasses.field(default_factory=dict)
+    #: tid -> digests referenced but absent (the un-masked counterpart of
+    #: the old pod_nbytes()==0 behavior)
+    missing_pods: Dict[int, List[str]] = dataclasses.field(
+        default_factory=dict)
+    #: zero-byte pods found in the store (a write no backend should have
+    #: admitted — serialized pods are never empty)
+    empty_pods: List[str] = dataclasses.field(default_factory=list)
+    #: pods whose bytes fail to deserialize (deep mode only)
+    corrupt_pods: List[str] = dataclasses.field(default_factory=list)
+    #: ref -> (old tid, new tid or None); keys look like "branch:main",
+    #: "tag:v1", "HEAD"
+    refs_rolled_back: Dict[str, Tuple[Optional[int], Optional[int]]] = \
+        dataclasses.field(default_factory=dict)
+    refs_deleted: List[str] = dataclasses.field(default_factory=list)
+    refs_rebuilt: bool = False
+    legacy_head_repaired: bool = False
+    n_tmp_removed: int = 0
+    n_manifests_swept: int = 0
+    n_pods_swept: int = 0
+    swept_pod_digests: List[str] = dataclasses.field(default_factory=list)
+    t_scan: float = 0.0
+    t_repair: float = 0.0
+
+    @property
+    def clean(self) -> bool:
+        """True iff the store needed no classification and no repair."""
+        return not (self.incomplete or self.empty_pods or self.corrupt_pods
+                    or self.refs_rolled_back or self.refs_deleted
+                    or self.refs_rebuilt or self.legacy_head_repaired
+                    or self.n_tmp_removed or self.n_manifests_swept
+                    or self.n_pods_swept)
+
+    def as_dict(self) -> Dict[str, Any]:
+        d = {k: v for k, v in self.__dict__.items()
+             if k != "swept_pod_digests"}
+        d["clean"] = self.clean
+        return d
+
+
+def _pod_state(store: BaseStore, digest_hex: str, deep: bool,
+               cache: Dict[str, str]) -> str:
+    """'ok' | 'missing' | 'empty' | 'corrupt' for one content address."""
+    got = cache.get(digest_hex)
+    if got is not None:
+        return got
+    state = "ok"
+    try:
+        if not store.has_pod(digest_hex):
+            state = "missing"
+        elif store.pod_nbytes(digest_hex) == 0:
+            state = "empty"
+        elif deep:
+            obj = msgpack.unpackb(store.get_pod(digest_hex), raw=False)
+            if not isinstance(obj, dict) or "e" not in obj:
+                state = "corrupt"
+    except FileNotFoundError:
+        state = "missing"
+    except Exception:
+        # failed decompression, codec tag garbage, msgpack truncation —
+        # all the faces a torn pod wears.
+        state = "corrupt"
+    cache[digest_hex] = state
+    return state
+
+
+def fsck(store: BaseStore, *, repair: bool = True, deep: bool = False,
+         sweep_orphans: bool = False) -> FsckReport:
+    """Scan `store` for torn-save damage; repair and sweep if asked.
+
+    Returns an `FsckReport`.  With ``sweep_orphans=True`` pods referenced
+    by *no* manifest at all are also deleted (off by default: a pod
+    parked by a crashed 1→2-window save is harmless, and a concurrent
+    writer mid-save would look identical — only enable when the caller
+    owns the store exclusively, e.g. the crash-matrix harness).
+    """
+    rep = FsckReport(deep=deep, repaired=repair)
+    t0 = _time.perf_counter()
+
+    # ---- 1. classify every manifest -----------------------------------
+    pod_cache: Dict[str, str] = {}
+    complete: Dict[int, Set[str]] = {}      # tid -> referenced digests
+    parents: Dict[int, Optional[int]] = {}
+    for tid in store.list_time_ids():
+        rep.n_manifests += 1
+        try:
+            m = store.get_manifest(tid)
+            digs = {meta["d"] for meta in m.get("pods", {}).values()}
+        except Exception:
+            rep.incomplete[tid] = "torn manifest"
+            continue
+        parents[tid] = m.get("parent")
+        bad: Optional[str] = None
+        for d in sorted(digs):
+            state = _pod_state(store, d, deep, pod_cache)
+            if state == "missing":
+                rep.missing_pods.setdefault(tid, []).append(d)
+            if state != "ok" and bad is None:
+                bad = f"{state} pod {d}"
+        if bad is not None:
+            rep.incomplete[tid] = bad
+        else:
+            complete[tid] = digs
+    rep.n_commits_complete = len(complete)
+
+    # deep/sweep integrity of unreferenced pods: a torn orphan pod sits
+    # at a content address future saves will dedup against, so it must
+    # be found even though no manifest names it.
+    if deep or sweep_orphans:
+        for d in store.list_pods():
+            _pod_state(store, d, deep, pod_cache)
+    rep.empty_pods = sorted(d for d, s in pod_cache.items()
+                            if s == "empty")
+    rep.corrupt_pods = sorted(d for d, s in pod_cache.items()
+                              if s == "corrupt")
+
+    # ---- 2. plan the refs repair ---------------------------------------
+    complete_tids = set(complete)
+
+    def newest_complete_ancestor(tid: Optional[int]) -> Optional[int]:
+        seen: Set[int] = set()
+        cur = tid
+        while cur is not None and cur not in seen:
+            seen.add(cur)
+            if cur in complete_tids:
+                return cur
+            if cur not in parents:
+                # torn manifest: the parent pointer is unreadable, so the
+                # chain breaks here.  TimeIDs are globally monotone and a
+                # parent always lands before its child, so the newest
+                # complete commit older than the break is the best
+                # recoverable ancestor.
+                older = [t for t in complete_tids if t < cur]
+                return max(older) if older else None
+            cur = parents[cur]
+        return None
+
+    rep.t_scan = _time.perf_counter() - t0
+    if not repair:
+        return rep
+
+    # ---- 3. repair refs via CAS ----------------------------------------
+    t0 = _time.perf_counter()
+    for _ in range(MAX_REPAIR_RETRIES):
+        refs_blob = store.get_meta(REFS_META_KEY)
+        branches: Dict[str, int] = {}
+        tags: Dict[str, int] = {}
+        head_branch: Optional[str] = DEFAULT_BRANCH
+        detached: Optional[int] = None
+        refs_ok = False
+        if refs_blob is not None:
+            try:
+                refs = msgpack.unpackb(refs_blob, raw=False)
+                branches = {str(k): int(v)
+                            for k, v in refs["branches"].items()}
+                tags = {str(k): int(v) for k, v in refs["tags"].items()}
+                head_branch = refs["head_branch"]
+                detached = refs["detached"]
+                refs_ok = True
+            except Exception:
+                refs_ok = False
+        if not refs_ok:
+            # refs blob absent (pre-versioning store) or torn: rebuild
+            # from the complete manifests, bootstrap-style — every
+            # childless complete tip becomes a branch.
+            rep.refs_rebuilt = refs_blob is not None and bool(
+                rep.n_manifests)
+            branches, tags = {}, {}
+            head_branch, detached = DEFAULT_BRANCH, None
+            with_children = {p for t, p in parents.items()
+                             if p is not None and t in complete_tids}
+            tips = [t for t in sorted(complete_tids)
+                    if t not in with_children]
+            if tips:
+                newest = max(tips)
+                branches[DEFAULT_BRANCH] = newest
+                for t in tips:
+                    if t != newest:
+                        branches[f"tip-{t}"] = t
+            if refs_blob is None and not branches:
+                break                         # empty store: nothing to do
+        else:
+            rep.refs_rebuilt = False
+
+        rep.refs_rolled_back = {}
+        rep.refs_deleted = []
+        for name, tid in sorted(branches.items()):
+            if tid in complete_tids:
+                continue
+            new = newest_complete_ancestor(tid)
+            if new is None:
+                rep.refs_deleted.append(f"branch:{name}")
+            else:
+                rep.refs_rolled_back[f"branch:{name}"] = (tid, new)
+        for name, tid in sorted(tags.items()):
+            if tid in complete_tids:
+                continue
+            new = newest_complete_ancestor(tid)
+            if new is None:
+                rep.refs_deleted.append(f"tag:{name}")
+            else:
+                rep.refs_rolled_back[f"tag:{name}"] = (tid, new)
+        for key, (_, new) in rep.refs_rolled_back.items():
+            kind, name = key.split(":", 1)
+            (branches if kind == "branch" else tags)[name] = new
+        for key in rep.refs_deleted:
+            kind, name = key.split(":", 1)
+            (branches if kind == "branch" else tags).pop(name, None)
+
+        if head_branch is not None and head_branch not in branches:
+            # the current branch itself was deleted: fall back to the
+            # default branch, else any surviving branch, else detach at
+            # the newest complete commit.
+            if DEFAULT_BRANCH in branches:
+                head_branch = DEFAULT_BRANCH
+            elif branches:
+                head_branch = sorted(branches)[0]
+            else:
+                head_branch = None
+                detached = max(complete_tids) if complete_tids else None
+        if head_branch is None and detached is not None \
+                and detached not in complete_tids:
+            new = newest_complete_ancestor(detached)
+            rep.refs_rolled_back["HEAD"] = (detached, new)
+            detached = new
+
+        new_blob = msgpack.packb({
+            "branches": branches, "tags": tags,
+            "head_branch": head_branch, "detached": detached,
+        }, use_bin_type=True)
+        if new_blob == refs_blob:
+            break                             # nothing to change
+        if store.compare_and_put_meta(REFS_META_KEY, refs_blob, new_blob):
+            break
+        # lost a CAS race (concurrent repair): re-read and re-plan.
+    else:
+        raise RuntimeError(
+            "fsck: refs kept changing underneath the repair — is a "
+            "writer active?  fsck requires exclusive store access.")
+
+    # ---- 4. sweep debris ------------------------------------------------
+    # manifests first: the same crash-safe ordering as GC — an interrupted
+    # fsck must never leave a manifest naming a pod fsck deleted.
+    for tid in sorted(rep.incomplete):
+        if store.delete_manifest(tid):
+            rep.n_manifests_swept += 1
+    bad_pods = set(rep.empty_pods) | set(rep.corrupt_pods)
+    if sweep_orphans:
+        referenced = set().union(*complete.values()) if complete else set()
+        bad_pods |= {d for d in store.list_pods() if d not in referenced}
+    for d in sorted(bad_pods):
+        if store.has_pod(d):
+            store.delete_pod(d)
+            rep.n_pods_swept += 1
+            rep.swept_pod_digests.append(d)
+    rep.n_tmp_removed = store.sweep_tmp()
+    rep.legacy_head_repaired = store.repair_head()
+    rep.t_repair = _time.perf_counter() - t0
+    return rep

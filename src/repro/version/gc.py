@@ -11,6 +11,15 @@ realizes that over refs:
     (`Chipmink.gc` passes its in-memory HEAD so the state the next save
     will delta against is never collected).  Live pod digests are the
     union of the live manifests' pod tables.
+  * **validate** — before sweeping, a no-op compare-and-swap on the refs
+    blob proves refs did not move while the mark ran.  If a concurrent
+    writer advanced a ref mid-mark (a commit the mark set does not cover),
+    the sweep would delete live data — instead the collector reloads refs
+    and re-marks, up to `MAX_MARK_RETRIES` times.  (The remaining
+    validate→sweep window still assumes no concurrent *writer* — closing
+    it fully needs the lease-based GC of the multi-host direction in
+    ROADMAP; the CAS check is its prerequisite and already makes a
+    sweeping process safe against ref updates during the mark.)
   * **sweep** — every manifest of a dead commit and every pod digest
     outside the mark set is deleted.  Order matters for crash safety on
     the file backend: manifests are deleted *first*, so an interrupted
@@ -19,7 +28,8 @@ realizes that over refs:
 
 `dry_run=True` performs the full mark and measures the sweep without
 deleting; its byte estimate is computed from the same per-object sizes
-the real sweep frees, so estimate == actual by construction.
+the real sweep frees, so estimate == actual by construction (an object
+that vanished since the mark counts 0 in both).
 
 The caller must quiesce in-flight saves first (a pending manifest is
 invisible to the mark phase until it lands); `Chipmink.gc` drains its
@@ -29,10 +39,14 @@ digests from the thesaurus so future saves rewrite — not alias — them.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterable, List, Optional
+from typing import Any, Callable, Dict, Iterable, List, Optional
 
 from ..core.store import BaseStore
-from .commit_graph import CommitDAG
+from .commit_graph import REFS_META_KEY, CommitDAG
+
+#: how many times the collector re-marks after catching refs moving
+#: underneath it before giving up.
+MAX_MARK_RETRIES = 4
 
 
 @dataclasses.dataclass
@@ -44,6 +58,7 @@ class GCStats:
     n_pods_deleted: int = 0
     pod_bytes_reclaimed: int = 0
     manifest_bytes_reclaimed: int = 0
+    n_mark_restarts: int = 0
     deleted_pod_digests: List[str] = dataclasses.field(default_factory=list)
 
     @property
@@ -57,31 +72,66 @@ class GCStats:
         return d
 
 
+def _nbytes_or_zero(fn: Callable[[Any], int], key: Any) -> int:
+    try:
+        return fn(key)
+    except FileNotFoundError:
+        return 0
+
+
 def mark_and_sweep(store: BaseStore, dag: CommitDAG, *,
                    extra_roots: Iterable[Optional[int]] = (),
-                   dry_run: bool = False) -> GCStats:
-    """Collect pods and manifests unreachable from the DAG's refs."""
-    dag.refresh()
+                   dry_run: bool = False,
+                   _after_mark: Optional[Callable[[], None]] = None
+                   ) -> GCStats:
+    """Collect pods and manifests unreachable from the DAG's refs.
+
+    `_after_mark` is a test seam: called between mark and the refs CAS
+    validation, where a concurrent ref movement must trigger a re-mark.
+    """
     stats = GCStats(dry_run=dry_run)
 
-    # mark
-    live_tids = dag.live_commits(extra_roots)
-    live_digests = dag.reachable_digests(extra_roots)
-    stats.n_commits_live = len(live_tids)
-    stats.n_pods_live = len(live_digests)
+    for attempt in range(MAX_MARK_RETRIES + 1):
+        refs_blob = store.get_meta(REFS_META_KEY)
+        dag.refresh()
 
-    dead_tids = [t for t in store.list_time_ids() if t not in live_tids]
-    dead_pods = [d for d in store.list_pods() if d not in live_digests]
-    stats.n_commits_deleted = len(dead_tids)
-    stats.n_pods_deleted = len(dead_pods)
-    stats.deleted_pod_digests = dead_pods
+        # mark
+        live_tids = dag.live_commits(extra_roots)
+        live_digests = dag.reachable_digests(extra_roots)
+        stats.n_commits_live = len(live_tids)
+        stats.n_pods_live = len(live_digests)
 
-    if dry_run:
-        stats.manifest_bytes_reclaimed = sum(
-            store.manifest_nbytes(t) for t in dead_tids)
-        stats.pod_bytes_reclaimed = sum(
-            store.pod_nbytes(d) for d in dead_pods)
-        return stats
+        dead_tids = [t for t in store.list_time_ids()
+                     if t not in live_tids]
+        dead_pods = [d for d in store.list_pods()
+                     if d not in live_digests]
+        stats.n_commits_deleted = len(dead_tids)
+        stats.n_pods_deleted = len(dead_pods)
+        stats.deleted_pod_digests = dead_pods
+
+        if dry_run:
+            stats.manifest_bytes_reclaimed = sum(
+                _nbytes_or_zero(store.manifest_nbytes, t)
+                for t in dead_tids)
+            stats.pod_bytes_reclaimed = sum(
+                _nbytes_or_zero(store.pod_nbytes, d) for d in dead_pods)
+            return stats
+
+        if _after_mark is not None:
+            _after_mark()
+
+        # validate: a no-op CAS proves the refs blob is still the one the
+        # mark ran against; a conflict means a writer moved a ref and the
+        # mark set may miss its commits — reload and re-mark.
+        if refs_blob is None or store.compare_and_put_meta(
+                REFS_META_KEY, refs_blob, refs_blob):
+            break
+        stats.n_mark_restarts += 1
+        dag.reload()
+    else:
+        raise RuntimeError(
+            f"gc: refs moved during {MAX_MARK_RETRIES + 1} consecutive "
+            "mark phases; aborting the sweep (quiesce writers first)")
 
     # sweep: manifests first (crash-safe ordering — see module docstring)
     for tid in dead_tids:

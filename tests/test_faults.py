@@ -1,0 +1,547 @@
+"""Crash consistency: refs CAS, fault injection, recovery fsck, retrying
+saves — the save-as-transaction contract.
+
+The centerpiece is the crash matrix: a mutate→save loop killed at every
+injection point of the commit protocol (pods → manifest → refs), then
+"rebooted" (store reopened, fsck run) and checked against a pre-crash
+oracle — refs must always name a complete commit whose contents load
+bit-identical.  The default run covers every (point, flavor) once; the
+@slow sweep additionally kills at later calls of each point (mid-multi-
+pod writes) across a longer mutation history.
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (AsyncSaveError, AsyncSaver, Chipmink, FileStore,
+                        FaultyStore, InjectedCrash, MemoryStore, RetryPolicy,
+                        call_with_retries, crash_matrix_points)
+from repro.version import CommitDAG, fsck, mark_and_sweep
+
+
+def _no_debris(root):
+    bad = []
+    for dirpath, _, fnames in os.walk(root):
+        bad += [os.path.join(dirpath, f) for f in fnames
+                if f.endswith(".tmp") or f.endswith(".lock")]
+    return bad
+
+
+def _mk_state(rng, rows=256):
+    return {
+        "params": {"emb": rng.standard_normal((rows, 8)).astype(np.float32),
+                   "w": rng.standard_normal((16, 16)).astype(np.float32)},
+        "opt": {"mu": np.zeros((rows, 8), np.float32)},
+        "step": 0,
+    }
+
+
+def _mutate(state, i):
+    state["params"]["w"] = state["params"]["w"] + np.float32(1.0)
+    state["opt"]["mu"] = state["opt"]["mu"] + np.float32(0.5)
+    state["step"] = i
+    return state
+
+
+def _snap(state):
+    return {
+        "params": {k: np.array(v) for k, v in state["params"].items()},
+        "opt": {k: np.array(v) for k, v in state["opt"].items()},
+        "step": state["step"],
+    }
+
+
+def _assert_bitwise(loaded, oracle):
+    assert loaded["step"] == oracle["step"]
+    for grp in ("params", "opt"):
+        for k, v in oracle[grp].items():
+            got = np.asarray(loaded[grp][k])
+            assert got.dtype == v.dtype and got.shape == v.shape
+            assert np.array_equal(got, v), f"{grp}/{k} differs"
+
+
+# ---------------------------------------------------------------------------
+# store layer: CAS, atomic HEAD, strict pod_nbytes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mk_store", [
+    lambda tmp: MemoryStore(),
+    lambda tmp: FileStore(str(tmp)),
+], ids=["memory", "file"])
+def test_compare_and_put_meta(tmp_path, mk_store):
+    store = mk_store(tmp_path)
+    # create-only: expected None means the key must not exist yet
+    assert store.compare_and_put_meta("k", None, b"v1")
+    assert not store.compare_and_put_meta("k", None, b"v2")
+    assert store.get_meta("k") == b"v1"
+    # swap with the right expectation; fail with a stale one
+    assert store.compare_and_put_meta("k", b"v1", b"v2")
+    assert not store.compare_and_put_meta("k", b"v1", b"v3")
+    assert store.get_meta("k") == b"v2"
+    assert store.stats.meta_cas_ok == 2
+    assert store.stats.meta_cas_conflicts == 2
+
+
+def test_cas_many_writers_memory():
+    """N threads CAS-increment one counter; every increment must land."""
+    store = MemoryStore()
+    store.put_meta("n", b"0")
+
+    def bump(reps):
+        for _ in range(reps):
+            while True:
+                cur = store.get_meta("n")
+                if store.compare_and_put_meta(
+                        "n", cur, str(int(cur) + 1).encode()):
+                    break
+
+    threads = [threading.Thread(target=bump, args=(25,)) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert store.get_meta("n") == b"200"
+
+
+def test_cas_stale_lock_times_out(tmp_path, monkeypatch):
+    store = FileStore(str(tmp_path))
+    store.put_meta("k", b"v")
+    # a crashed writer left its lock behind: the CAS must not hang forever
+    open(store._meta_path("k") + ".lock", "wb").close()
+    monkeypatch.setattr(FileStore, "LOCK_TIMEOUT_S", 0.2)
+    with pytest.raises(TimeoutError, match="fsck"):
+        store.compare_and_put_meta("k", b"v", b"w")
+    # fsck's debris sweep clears it, after which the CAS proceeds
+    assert store.sweep_tmp() >= 1
+    assert store.compare_and_put_meta("k", b"v", b"w")
+
+
+def test_head_tolerates_corruption_and_repairs(tmp_path):
+    store = FileStore(str(tmp_path))
+    store.put_manifest(1, {"time_id": 1, "pods": {}})
+    store.put_manifest(2, {"time_id": 2, "pods": {}})
+    assert store.head() == 2
+    # torn / garbage HEAD: head() falls back to the newest manifest
+    with open(store._head_path(), "wb") as f:
+        f.write(b"garb\x00age")
+    assert store.head() == 2
+    assert store.repair_head()            # rewrites the pointer...
+    assert not store.repair_head()        # ...idempotently
+    with open(store._head_path(), "rb") as f:
+        assert f.read() == b"2"
+    # empty HEAD (classic torn bare-open write) also recovers
+    open(store._head_path(), "wb").close()
+    assert store.head() == 2
+
+
+@pytest.mark.parametrize("mk_store", [
+    lambda tmp: MemoryStore(),
+    lambda tmp: FileStore(str(tmp)),
+], ids=["memory", "file"])
+def test_pod_nbytes_strict_on_missing(tmp_path, mk_store):
+    """Missing is an error, not 0 bytes: fsck distinguishes a truncated
+    pod (0 bytes, torn write) from one that is not there at all."""
+    store = mk_store(tmp_path)
+    store.put_pod("aa" * 16, b"x" * 64)
+    assert store.pod_nbytes("aa" * 16) > 0
+    with pytest.raises(FileNotFoundError):
+        store.pod_nbytes("bb" * 16)
+    with pytest.raises(FileNotFoundError):
+        store.manifest_nbytes(99)
+
+
+def test_filestore_fsync_mode_roundtrip(tmp_path):
+    store = FileStore(str(tmp_path), fsync=True)
+    store.put_pod("cc" * 16, b"y" * 128)
+    store.put_manifest(1, {"time_id": 1, "pods": {}})
+    store.put_meta("k", b"v")
+    assert store.get_pod("cc" * 16) == b"y" * 128
+    assert store.get_manifest(1)["time_id"] == 1
+    assert not _no_debris(str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# refs CAS in the commit DAG: concurrent writers rebase, never clobber
+# ---------------------------------------------------------------------------
+
+def _seed_commits(store, n=2):
+    ck = Chipmink(store=store, use_kernel=False, fsck_on_open=False)
+    rng = np.random.default_rng(0)
+    s = _mk_state(rng)
+    tids = []
+    for i in range(n):
+        _mutate(s, i)
+        tids.append(ck.save(s))
+    return ck, tids
+
+
+def test_dag_concurrent_mutations_rebase(tmp_path):
+    store = FileStore(str(tmp_path))
+    _, tids = _seed_commits(store)
+    dag1 = CommitDAG(store)
+    dag2 = CommitDAG(store)      # snapshot of the same refs blob
+    dag1.create_branch("a", at=tids[0])
+    # dag2's cached blob is stale now: its CAS must conflict, rebase on
+    # dag1's result, and land both branches
+    dag2.create_branch("b", at=tids[1])
+    dag3 = CommitDAG(store)
+    assert dag3.branches["a"] == tids[0]
+    assert dag3.branches["b"] == tids[1]
+    # validation re-runs after the rebase: duplicate names still rejected
+    with pytest.raises(ValueError, match="already exists"):
+        dag2.create_branch("a")
+
+
+def test_gc_revalidates_refs_after_mark(tmp_path):
+    """A ref moved mid-mark triggers a re-mark (no-op CAS conflict), and
+    the sweep runs against the NEW refs."""
+    store = FileStore(str(tmp_path))
+    ck, tids = _seed_commits(store, n=1)
+    ck.branch("side")
+    rng = np.random.default_rng(1)
+    s = _mk_state(rng)
+    side_tid = ck.save(_mutate(s, 99))
+    ck.checkout("main")
+    ck.wait()
+
+    dag = CommitDAG(store)
+    fired = []
+
+    def move_refs():
+        if not fired:
+            fired.append(1)
+            CommitDAG(store).delete_branch("side")
+
+    stats = mark_and_sweep(store, dag, extra_roots=(tids[0],),
+                           _after_mark=move_refs)
+    assert stats.n_mark_restarts == 1
+    # the re-mark saw the deletion: side's commit was swept
+    assert side_tid not in store.list_time_ids()
+    assert tids[0] in store.list_time_ids()
+
+
+def test_gc_gives_up_when_refs_keep_moving(tmp_path):
+    store = FileStore(str(tmp_path))
+    _, tids = _seed_commits(store)
+    dag = CommitDAG(store)
+    n = [0]
+
+    def churn():
+        n[0] += 1
+        CommitDAG(store).create_tag(f"t{n[0]}", at=tids[0])
+
+    with pytest.raises(RuntimeError, match="quiesce"):
+        mark_and_sweep(store, dag, _after_mark=churn)
+
+
+# ---------------------------------------------------------------------------
+# async saver: degraded-mode error aggregation
+# ---------------------------------------------------------------------------
+
+def test_async_saver_single_error_type_stable():
+    sv = AsyncSaver(depth=2)
+
+    def boom():
+        raise KeyError("pod 7")
+
+    sv.submit(boom)
+    with pytest.raises(KeyError):
+        sv.wait()
+    assert sv.n_failed == 1
+    sv.wait()                      # drained: no re-raise, count survives
+    assert sv.n_failed == 1
+
+
+def test_async_saver_aggregates_multiple_errors():
+    sv = AsyncSaver(depth=2)
+    gate = threading.Event()
+
+    def boom(msg):
+        def f():
+            gate.wait(5.0)
+            raise RuntimeError(msg)
+        return f
+
+    sv.submit(boom("first"))
+    sv.submit(boom("second"))
+    gate.set()
+    with pytest.raises(AsyncSaveError) as ei:
+        sv.wait()
+    assert len(ei.value.errors) == 2
+    assert sv.n_failed == 2
+    assert "first" in str(ei.value) and "second" in str(ei.value)
+    # later submits work again (the pipeline survived both failures)
+    done = []
+    sv.submit(lambda: done.append(1))
+    sv.wait()
+    assert done == [1]
+
+
+# ---------------------------------------------------------------------------
+# retry policy: transient I/O errors absorbed, crashes never
+# ---------------------------------------------------------------------------
+
+def test_call_with_retries_backoff_and_exhaustion():
+    sleeps = []
+    calls = [0]
+
+    def flaky():
+        calls[0] += 1
+        if calls[0] < 3:
+            raise IOError("transient")
+        return "ok"
+
+    out, n = call_with_retries(flaky, RetryPolicy(backoff_s=0.01),
+                               sleep=sleeps.append)
+    assert out == "ok" and n == 2
+    assert sleeps == [0.01, 0.02]
+
+    def always():
+        raise IOError("down")
+
+    with pytest.raises(IOError):
+        call_with_retries(always, RetryPolicy(max_retries=2, backoff_s=0),
+                          sleep=lambda s: None)
+
+
+def test_save_retries_transient_store_errors(tmp_path):
+    fs = FaultyStore(FileStore(str(tmp_path)))
+    ck = Chipmink(store=fs, use_kernel=False,
+                  retry_policy=RetryPolicy(backoff_s=0.001))
+    rng = np.random.default_rng(2)
+    s = _mk_state(rng)
+    ck.save(_mutate(s, 0))
+    fs.transient("put_pod", times=2)
+    fs.transient("put_manifest", times=1)
+    tid = ck.save(_mutate(s, 1))
+    assert ck.save_stats[-1]["n_retries"] == 3
+    _assert_bitwise(ck.load(time_id=tid), _snap(s))
+
+
+def test_injected_crash_not_retried(tmp_path):
+    """InjectedCrash is BaseException: the retry policy must never eat a
+    process death."""
+    fs = FaultyStore(FileStore(str(tmp_path)))
+    ck = Chipmink(store=fs, use_kernel=False)
+    rng = np.random.default_rng(3)
+    s = _mk_state(rng)
+    ck.save(_mutate(s, 0))
+    fs.clear()                           # reset per-point call counts
+    fs.crash_at("put_pod", when="before")
+    with pytest.raises(InjectedCrash):
+        ck.save(_mutate(s, 1))
+    assert fs.calls["put_pod"] == 1      # exactly one attempt, no retry
+
+
+# ---------------------------------------------------------------------------
+# fsck classification
+# ---------------------------------------------------------------------------
+
+def test_fsck_clean_store_is_clean(tmp_path):
+    store = FileStore(str(tmp_path))
+    _seed_commits(store)
+    rep = fsck(store, deep=True)
+    assert rep.clean
+    assert rep.n_commits_complete == 2 and not rep.incomplete
+
+
+def test_fsck_reports_missing_pod(tmp_path):
+    store = FileStore(str(tmp_path))
+    ck, tids = _seed_commits(store)
+    # pick a pod unique to the tip commit (shared pods would tear the
+    # parent too and leave no complete ancestor to roll back to)
+    d1 = {p["d"] for p in store.get_manifest(tids[0])["pods"].values()}
+    m = store.get_manifest(tids[-1])
+    victim = next(p["d"] for p in m["pods"].values() if p["d"] not in d1)
+    store.delete_pod(victim)
+    rep = fsck(store, repair=False)
+    assert victim in rep.missing_pods[tids[-1]]
+    assert "missing pod" in rep.incomplete[tids[-1]]
+    # repair rolls the branch back to the surviving parent commit
+    rep = fsck(store)
+    assert rep.refs_rolled_back["branch:main"] == (tids[-1], tids[0])
+    assert CommitDAG(store).head_commit() == tids[0]
+
+
+def test_fsck_sweeps_tmp_and_orphans(tmp_path):
+    store = FileStore(str(tmp_path))
+    _seed_commits(store)
+    import msgpack
+    open(os.path.join(str(tmp_path), "junk.tmp"), "wb").close()
+    # a WELL-FORMED pod referenced by nothing (a crashed 1→2-window save)
+    store.put_pod("dd" * 16, msgpack.packb({"pid": 0, "e": []},
+                                           use_bin_type=True))
+    rep = fsck(store, deep=True)
+    assert rep.n_tmp_removed == 1
+    assert store.has_pod("dd" * 16)                 # orphans kept by default
+    rep = fsck(store, deep=True, sweep_orphans=True)
+    assert "dd" * 16 in rep.swept_pod_digests
+    assert not store.has_pod("dd" * 16)
+
+
+def test_fsck_empty_store_noop(tmp_path):
+    assert fsck(FileStore(str(tmp_path))).clean
+    assert fsck(MemoryStore(), deep=True).clean
+
+
+# ---------------------------------------------------------------------------
+# the crash matrix
+# ---------------------------------------------------------------------------
+
+def _expected_head(point, flavor, t_last, t_attempt):
+    """Where refs must point after reboot + fsck.
+
+    The manifest lands before the refs CAS, so once `cas_meta` has run
+    (crash-after) the attempt IS the committed truth; a torn refs blob is
+    rebuilt from manifests, which reaches the same conclusion.  At every
+    earlier death the caller never saw success and refs must still name
+    the previous commit."""
+    if point == "cas_meta" and flavor in ("torn", "crash-after"):
+        return t_attempt
+    return t_last
+
+
+def _run_crash_case(root, point, flavor, *, n_setup_saves=2, skip=0,
+                    seed=0):
+    fs = FaultyStore(FileStore(root))
+    ck = Chipmink(store=fs, use_kernel=False, fsck_on_open=False)
+    rng = np.random.default_rng(seed)
+    s = _mk_state(rng)
+    oracle = {}
+    tids = []
+    for i in range(n_setup_saves):
+        _mutate(s, i)
+        tid = ck.save(s)
+        tids.append(tid)
+        oracle[tid] = _snap(s)
+
+    _mutate(s, n_setup_saves)
+    t_attempt = tids[-1] + 1
+    oracle[t_attempt] = _snap(s)
+    fs.clear()                 # call counts restart at the attempt save
+    fault = fs.arm(point, flavor, skip=skip)
+    try:
+        ck.save(s)
+        crashed = False
+    except InjectedCrash:
+        crashed = True
+    if fault.n_fired == 0:
+        assert not crashed
+        return False           # skip > calls at this point in one save
+    assert crashed, f"{point}/{flavor} fired but the save survived"
+
+    # ---- reboot: fresh process over the same directory ----
+    ck2 = Chipmink(store=FileStore(root), use_kernel=False,
+                   fsck_on_open="deep")
+    head = ck2.versions.head_commit()
+    want = _expected_head(point, flavor, tids[-1], t_attempt)
+    assert head == want, f"{point}/{flavor}: head {head}, want {want}"
+    # refs resolve to a COMPLETE commit, bit-identical to the oracle
+    rep = fsck(ck2.store, repair=False, deep=True)
+    assert head not in rep.incomplete
+    _assert_bitwise(ck2.load(time_id=head), oracle[head])
+    assert not _no_debris(root)
+
+    # the store stays writable: re-running the killed save must land and
+    # round-trip (catches a torn pod squatting on a content address)
+    t_redo = ck2.save(oracle[t_attempt])
+    _assert_bitwise(ck2.load(time_id=t_redo), oracle[t_attempt])
+    assert fsck(ck2.store, repair=False, deep=True).clean
+    return True
+
+
+@pytest.mark.parametrize("point,flavor", crash_matrix_points(),
+                         ids=lambda v: str(v))
+def test_crash_matrix(tmp_path, point, flavor):
+    _run_crash_case(str(tmp_path), point, flavor)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("point,flavor", crash_matrix_points(),
+                         ids=lambda v: str(v))
+def test_crash_matrix_full_sweep(tmp_path, point, flavor):
+    """Kill at LATER calls of each point too (2nd pod of a multi-pod
+    write, refs CAS of a longer history) across several histories.  A
+    (skip, seed) cell where the point isn't called that often in one
+    save simply doesn't fire — counted, not failed."""
+    n_ran = 0
+    for seed in range(2):
+        for skip in (0, 1):
+            root = str(tmp_path / f"s{seed}k{skip}")
+            os.makedirs(root)
+            if _run_crash_case(root, point, flavor, n_setup_saves=3,
+                               skip=skip, seed=seed):
+                n_ran += 1
+    assert n_ran >= 2          # skip=0 always fires for every point
+
+
+def test_crash_during_async_save_then_fsck(tmp_path):
+    """Async pipeline: a crashed body parks the error; wait() surfaces
+    it; fsck rolls the torn attempt back; saving resumes."""
+    fs = FaultyStore(FileStore(str(tmp_path)))
+    ck = Chipmink(store=fs, use_kernel=False, async_mode=True,
+                  fsck_on_open=False)
+    rng = np.random.default_rng(5)
+    s = _mk_state(rng)
+    t1 = ck.save(_mutate(s, 0))
+    ck.wait()
+    fs.torn_at("put_manifest")
+    ck.save(_mutate(s, 1))
+    with pytest.raises(InjectedCrash):
+        ck.wait()
+    assert ck.saver.n_failed == 1
+    fs.clear()
+    rep = ck.fsck(deep=True)
+    assert rep.n_manifests_swept == 1
+    assert ck.versions.head_commit() == t1
+    t3 = ck.save(_mutate(s, 2))
+    ck.wait()
+    _assert_bitwise(ck.load(time_id=t3), _snap(s))
+
+
+# ---------------------------------------------------------------------------
+# supervisor restart path runs fsck
+# ---------------------------------------------------------------------------
+
+def test_supervisor_restart_absorbs_failed_save_and_fscks(tmp_path):
+    """A save whose retries are exhausted fails in the background; the
+    step-failure restart path absorbs it (degraded mode), runs fsck, and
+    resumes from the newest commit that actually landed — not from the
+    TimeID of the save that never did."""
+    from repro.runtime.fault_tolerance import TrainingSupervisor
+
+    fs = FaultyStore(FileStore(str(tmp_path)))
+    ck = Chipmink(store=fs, use_kernel=False, async_mode=True,
+                  fsck_on_open=False,
+                  retry_policy=RetryPolicy(backoff_s=0.001))
+    sup = TrainingSupervisor(ck, save_every=5, max_restarts=4)
+
+    def step(state, i):
+        state = dict(state)
+        state["w"] = state["w"] + np.float32(1)
+        state["step"] = np.int64(i + 1)
+        return state
+
+    def snap(state):
+        return {"w": state["w"], "step": np.int64(state["step"])}
+
+    # the SECOND save's put_manifest fails through all 4 attempts
+    # (IOError, not a crash), then the fault is exhausted; the step-11
+    # failure exercises restart → wait (absorbs the IOError) → fsck →
+    # resume from the step-5 commit
+    fs.transient("put_manifest", times=4, skip=1)
+    state0 = {"w": np.zeros(16, np.float32), "step": np.int64(0)}
+    final, stats = sup.run(
+        state0, 20, step,
+        make_snapshot=snap, restore=lambda d: dict(d),
+        fail_at={11})
+    assert stats["failures"] == 1
+    assert stats["save_errors"] == 1        # the failed save was absorbed
+    assert ck.saver.n_failed == 1
+    assert stats["resumed_from"] == [5]
+    assert int(final["step"]) == 20
+    assert float(final["w"][0]) == 20.0
+    rep = fsck(FileStore(str(tmp_path)), repair=False, deep=True)
+    assert not rep.incomplete
