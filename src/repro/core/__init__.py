@@ -10,11 +10,16 @@ Public API:
     MemoryStore, FileStore
     FaultyStore, InjectedCrash, RetryPolicy — fault injection + retry
                         policy for the crash-consistency story
+    LeaseManager, LeaseHeartbeat — multi-writer leases, fencing tokens,
+                        save intents (Chipmink(multi_writer=True))
 """
 from .async_saver import AsyncSaveError, AsyncSaver
 from .checkpoint import Chipmink, TimeID, reflow
-from .faults import (Fault, FaultyStore, InjectedCrash, RetryPolicy,
-                     call_with_retries, crash_matrix_points)
+from .faults import (Fault, FaultyStore, InjectedCrash, LEASE_OPS,
+                     LeaseFaultInjector, RetryPolicy, call_with_retries,
+                     crash_matrix_points, lease_matrix_points)
+from .lease import (LEASES_META_KEY, Lease, LeaseHeartbeat, LeaseHeld,
+                    LeaseLost, LeaseManager, default_owner)
 from .graph import ObjectGraph, build_graph, chunk_grid, rebuild_tree
 from .graph_cache import GraphCache, IncrementalBuildInfo
 from .lga import (BUNDLE, SPLIT_CONTINUE, SPLIT_FINAL, BundleAll, LGA,

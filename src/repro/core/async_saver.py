@@ -107,6 +107,19 @@ class AsyncSaver:
             if err is not None:
                 raise err
 
+    def drain(self) -> List[BaseException]:
+        """Join every in-flight save and RETURN the pending errors
+        instead of raising — the shutdown flavor of `wait()`: a caller
+        tearing down (`Chipmink.close`) must still release its leases
+        and stop its heartbeat even when the last body failed.  The
+        returned list is the same set `wait()` would have raised;
+        ``n_failed`` still counts them."""
+        with self._cv:
+            while self._inflight > 0:
+                self._cv.wait()
+            errs, self._errors = self._errors, []
+            return errs
+
     def submit(self, fn: Callable[[], Any]) -> None:
         """Enqueue `fn` on the podding thread.  Returns immediately while
         fewer than `depth` saves are in flight; otherwise blocks until the

@@ -112,6 +112,39 @@ step never double-applies.  Durability on the file backend is opt-in:
 ``FileStore(root, fsync=True)`` fsyncs data + directory around every
 rename (the paper's workloads prefer throughput; crash-*consistency* —
 never serving a torn commit — holds either way).
+
+Multi-writer contract (leases & fencing)
+----------------------------------------
+The protocol above is crash-safe but single-writer: two processes on one
+store race TimeID allocation, and a concurrent GC can sweep pods a save
+has written (or is about to dedup against) before their manifest lands.
+``multi_writer=True`` layers `core.lease` on the same CAS primitive:
+
+  * the instance holds a shared **writer lease** (TTL ``lease_ttl_s``,
+    renewed by a heartbeat thread unless ``lease_heartbeat=False``, and
+    inline at every save);
+  * TimeIDs come from a CAS counter meta blob, so concurrent writers
+    never mint the same commit id;
+  * step 0 of every save — before pods are written and before dedup is
+    trusted — registers a **save intent** (the TimeID, its parent, and
+    every digest the manifest will reference) under the lease.  GC pins
+    intent-held
+    tids/digests; aliased pods are re-verified (``has_pod``) after the
+    intent lands and rewritten if a pre-intent sweep removed them
+    (``n_alias_rewrites`` in save stats);
+  * the refs CAS is **fenced**: the writer re-validates its lease
+    immediately before step 3 and aborts with `LeaseLost` if it was
+    reaped or taken over — a paused/partitioned writer can never publish
+    a commit whose pods a fenced GC already swept;
+  * ``gc()`` runs under the exclusive gc lease with the sweep-phase
+    fence (see version/gc.py), and ``fsck()`` reaps dead writers'
+    expired leases while honoring live peers' intents.
+
+Everything is keyed off the one `compare_and_put_meta` primitive, so the
+contract holds on any backend that has it (both built-ins do).  With the
+default ``multi_writer=False`` no lease traffic exists and the PR-6
+single-writer behavior is byte-identical.  ``close()`` drains the async
+pipeline and releases the lease so peers need not wait out the TTL.
 """
 from __future__ import annotations
 
@@ -119,6 +152,7 @@ import hashlib
 import time as _time
 from typing import Any, Callable, Dict, Iterable, List, Optional, Set
 
+import msgpack
 import numpy as np
 
 from .active_filter import ActiveVariableFilter
@@ -127,6 +161,7 @@ from .change_detector import ChangeDetector, pack_digest_table
 from .faults import RetryPolicy, call_with_retries
 from .graph import ObjectGraph, build_graph, rebuild_tree
 from .graph_cache import GraphCache, IncrementalBuildInfo
+from .lease import Lease, LeaseHeartbeat, LeaseLost, LeaseManager
 from .lga import LGA, PoddingPolicy
 from .podding import (PodAssignment, Unpodder, batched_chunk_fetch,
                       open_manifest, pod_graph, pod_structural_digest,
@@ -136,6 +171,10 @@ from .thesaurus import PodThesaurus
 from .volatility import FlipTracker
 
 TimeID = int
+
+#: meta blob holding the next unissued TimeID (multi-writer mode only):
+#: a CAS counter, so concurrent writers never mint the same commit id.
+TID_COUNTER_META_KEY = "tid_counter"
 
 
 class Chipmink:
@@ -158,6 +197,11 @@ class Chipmink:
         seed: int = 0,
         retry_policy: Optional[RetryPolicy] = None,
         fsck_on_open: Any = True,
+        multi_writer: bool = False,
+        lease_ttl_s: float = 10.0,
+        lease_heartbeat: bool = True,
+        max_refs_cas_retries: Optional[int] = None,
+        refs_cas_backoff: Optional[RetryPolicy] = None,
     ) -> None:
         self.store = store if store is not None else MemoryStore()
         self.policy = policy if policy is not None else LGA()
@@ -181,6 +225,14 @@ class Chipmink:
         self._pod_digests: Dict[int, bytes] = {}   # prev save's pod digests
         self.retry_policy = (retry_policy if retry_policy is not None
                              else RetryPolicy())
+        # Multi-writer mode: lease manager + lazily-acquired writer lease
+        # (see the "Multi-writer contract" in the module docstring).
+        self.leases: Optional[LeaseManager] = (
+            LeaseManager(self.store, ttl_s=lease_ttl_s)
+            if multi_writer else None)
+        self._writer_lease: Optional[Lease] = None
+        self._heartbeat: Optional[LeaseHeartbeat] = None
+        self._lease_heartbeat = lease_heartbeat
         # Recovery scan before anything reads the store: a previous
         # process may have died mid-transaction.  True = quick (existence
         # + non-empty of every referenced pod); "deep" additionally
@@ -189,7 +241,8 @@ class Chipmink:
         if fsck_on_open:
             from ..version import fsck as _fsck
             self.last_fsck = _fsck(self.store,
-                                   deep=(fsck_on_open == "deep"))
+                                   deep=(fsck_on_open == "deep"),
+                                   leases=self.leases)
         # Resume TimeIDs after the store's newest manifest: a reopened
         # store must append commits, never overwrite them (TimeIDs are
         # namespace-global, not per-process).
@@ -199,12 +252,80 @@ class Chipmink:
         # module import time.  Built eagerly so the caller thread and the
         # podding thread share one DAG instance from the start.
         from ..version import CommitDAG
-        self.versions = CommitDAG(self.store)
+        self.versions = CommitDAG(self.store,
+                                  max_cas_retries=max_refs_cas_retries,
+                                  cas_backoff=refs_cas_backoff)
         #: last saved/checked-out tid; resumes from the persisted HEAD so
         #: a reopened instance chains its first commit to the old tip.
         self._head: Optional[TimeID] = self.versions.head_commit()
         self.last_checkout_stats = None
         self.save_stats: List[Dict[str, Any]] = []
+
+    # ------------------------------------------------------------------
+    # multi-writer plumbing (leases, fenced TimeIDs)
+    # ------------------------------------------------------------------
+    def _alloc_time_id(self) -> TimeID:
+        """Next TimeID.  Single-writer: the local counter.  Multi-writer:
+        a CAS counter meta blob, seeded no lower than the local counter
+        (which itself started past the newest on-disk manifest), so two
+        writers can never mint the same commit id."""
+        if self.leases is None:
+            tid = self._next_time
+            self._next_time += 1
+            return tid
+        while True:
+            cur = self.store.get_meta(TID_COUNTER_META_KEY)
+            floor = self._next_time
+            if cur is not None:
+                floor = max(floor, msgpack.unpackb(cur, raw=False))
+            blob = msgpack.packb(floor + 1, use_bin_type=True)
+            if self.store.compare_and_put_meta(TID_COUNTER_META_KEY, cur,
+                                               blob):
+                self._next_time = floor + 1
+                return floor
+
+    def _ensure_writer_lease(self) -> Optional[Lease]:
+        """The instance's writer lease: acquired lazily, renewed inline
+        when past half-TTL, re-acquired after a loss (an expired writer
+        that was reaped simply rejoins — its next save re-registers its
+        intent under the new fence token)."""
+        if self.leases is None:
+            return None
+        lease = self._writer_lease
+        if lease is not None:
+            if self._heartbeat is not None and self._heartbeat.lost:
+                lease = None
+            else:
+                try:
+                    if self.leases.now() >= lease.expires - lease.ttl_s / 2:
+                        self.leases.renew(lease)
+                    return lease
+                except LeaseLost:
+                    lease = None
+        if self._heartbeat is not None:
+            self._heartbeat.stop()
+            self._heartbeat = None
+        lease = self.leases.acquire_writer()
+        self._writer_lease = lease
+        if self._lease_heartbeat:
+            self._heartbeat = LeaseHeartbeat(self.leases, lease).start()
+        return lease
+
+    def close(self) -> List[BaseException]:
+        """Shut down: drain the async pipeline (returning — not raising —
+        any pending save errors), stop the heartbeat, and release the
+        writer lease so peers need not wait out its TTL.  Idempotent."""
+        errors = self.saver.drain()
+        if self._heartbeat is not None:
+            self._heartbeat.stop()
+            self._heartbeat = None
+        if self.leases is not None and self._writer_lease is not None:
+            try:
+                self.leases.release(self._writer_lease)
+            except Exception:
+                pass                  # store down: the lease just expires
+            self._writer_lease = None
+        return errors
 
     # ------------------------------------------------------------------
     # save
@@ -218,8 +339,7 @@ class Chipmink:
         readonly_paths: Optional[Set[str]] = None,
         parent: Optional[TimeID] = None,
     ) -> TimeID:
-        time_id = self._next_time
-        self._next_time += 1
+        time_id = self._alloc_time_id()
         if parent is None:
             parent = self._head          # commit chains to HEAD by default
 
@@ -284,7 +404,7 @@ class Chipmink:
             self._save_body_inner(time_id, graph, ginfo, accessed_vars,
                                   touched_prefixes, readonly_paths, parent,
                                   t_graph, n_leaf_copies)
-        except BaseException:
+        except BaseException as exc:
             # A half-applied save poisons the reuse chain: the graph cache
             # has already advanced (build happens at save() call time), so
             # the next save must re-pod and re-hash from its own graph
@@ -296,6 +416,20 @@ class Chipmink:
             self._prev_graph = None
             self._pod_digests = {}
             self._head = self.versions.head_commit()
+            # the failed save's intent pins nothing worth keeping: drop
+            # it (best-effort — an expired lease is reaped by peers/fsck
+            # anyway, and the original error must surface, not this).  A
+            # save fenced out by LeaseLost forgets its lease entirely so
+            # the next save re-acquires under a fresh token instead of
+            # presenting the dead one again.
+            if self.leases is not None and self._writer_lease is not None:
+                if isinstance(exc, LeaseLost):
+                    self._writer_lease = None
+                else:
+                    try:
+                        self.leases.clear_intent(self._writer_lease)
+                    except Exception:
+                        self._writer_lease = None
             raise
 
     def _save_body_inner(self, time_id, graph, ginfo, accessed_vars,
@@ -379,6 +513,7 @@ class Chipmink:
         bytes_before = self.store.total_bytes()
         new_digests: Dict[int, bytes] = {}
         to_write: List[tuple] = []        # (pod, dig_hex or None, digest)
+        aliased_entries: List[tuple] = []  # same shape; dedup-skipped pods
         for pid, pod in asg.pods.items():
             if touched_pods is not None and pid not in touched_pods \
                     and pid in self._pod_digests:
@@ -409,6 +544,7 @@ class Chipmink:
                 to_write.append((pod, dig_hex, digest))
             else:
                 aliased += 1
+                aliased_entries.append((pod, dig_hex, digest))
             pods_meta[pid] = {
                 "d": dig_hex,
                 "pages": (asg.memo.pods[pid].pages
@@ -418,6 +554,34 @@ class Chipmink:
         self._pod_digests = new_digests
         stats["n_pod_digests_reused"] = digests_reused
         stats["t_decide"] = _time.perf_counter() - t0
+
+        # intent phase (multi-writer): declare the commit — its TimeID
+        # and every digest the manifest will reference — under the
+        # writer lease BEFORE any pod byte lands and before dedup is
+        # trusted.  From here the concurrent GC pins these digests
+        # (sweep-fence argument in core/lease.py).  Aliased pods are
+        # then re-verified: a sweep that ran before the intent landed
+        # may have deleted the blob the thesaurus still points at, in
+        # which case the pod is rewritten instead of aliased.
+        lease = self._ensure_writer_lease()
+        n_alias_rewrites = 0
+        if lease is not None:
+            # the parent tid rides along in the intent so a concurrent
+            # sweep cannot reclaim the manifest this commit will chain
+            # to while the save is still in flight.
+            self.leases.set_intent(
+                lease,
+                time_ids=tuple(t for t in (time_id, parent)
+                               if t is not None),
+                digests=sorted({m["d"] for m in pods_meta.values()}))
+            for pod, dig_hex, digest in aliased_entries:
+                if not self.store.has_pod(dig_hex):
+                    to_write.append((pod, dig_hex, digest))
+                    with self.saver.l_ns:
+                        self.thesaurus.prune([dig_hex])
+                    aliased -= 1
+                    n_alias_rewrites += 1
+        stats["n_alias_rewrites"] = n_alias_rewrites
 
         # gather phase: ONE batched device fetch for every chunk of every
         # dirty pod (clean pods never touch the device).
@@ -476,6 +640,13 @@ class Chipmink:
         }
         def commit() -> None:
             with self.saver.l_ns:
+                # fencing gate: the refs CAS must not publish a commit
+                # whose lease was reaped or taken over mid-save — a
+                # fenced GC may already have swept what the dead intent
+                # pinned.  LeaseLost aborts the save (not retried: it is
+                # a RuntimeError, outside the transient-OSError class).
+                if lease is not None:
+                    self.leases.check(lease)
                 # the manifest put is the data commit point; the refs CAS
                 # in record() is the visibility commit point.  Both are
                 # idempotent (atomic rename; CAS rebases), so the pair is
@@ -485,6 +656,14 @@ class Chipmink:
 
         _, nr = call_with_retries(commit, self.retry_policy)
         stats["n_retries"] = n_retries + nr
+        if lease is not None:
+            # the commit is now pinned by refs; the intent has done its
+            # job.  Best-effort: a lease lost in this instant cannot
+            # un-commit anything.
+            try:
+                self.leases.clear_intent(lease)
+            except Exception:
+                pass
         self._prev_pods = asg
         self._prev_graph = graph
         self.save_stats.append(stats)
@@ -549,6 +728,14 @@ class Chipmink:
         with self.saver.l_ns:
             return self.versions.create_tag(name, at=at)
 
+    def delete_branch(self, name: str) -> None:
+        """Drop a branch ref; its exclusive commits become GC-eligible.
+        Drains in-flight saves first — an async commit still targeting
+        the branch would otherwise resurrect it after the deletion."""
+        self.wait()
+        with self.saver.l_ns:
+            self.versions.delete_branch(name)
+
     def checkout(self, ref: Any = None, *, like: Any = None) -> Any:
         """Restore the state of a branch / tag / TimeID, delta-aware.
 
@@ -599,7 +786,8 @@ class Chipmink:
         with self.saver.l_ns:
             stats = mark_and_sweep(self.store, self.versions,
                                    extra_roots=(self._head,),
-                                   dry_run=dry_run)
+                                   dry_run=dry_run,
+                                   leases=self.leases)
             if not dry_run and stats.deleted_pod_digests:
                 self.thesaurus.prune(stats.deleted_pod_digests)
         return stats
@@ -615,7 +803,8 @@ class Chipmink:
         self.wait()
         from ..version import fsck as _fsck
         with self.saver.l_ns:
-            report = _fsck(self.store, deep=deep, repair=repair)
+            report = _fsck(self.store, deep=deep, repair=repair,
+                           leases=self.leases)
             if report.swept_pod_digests:
                 self.thesaurus.prune(report.swept_pod_digests)
             if repair:

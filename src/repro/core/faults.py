@@ -38,6 +38,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from .lease import LEASES_META_KEY as _LEASES_KEY
 from .store import BaseStore
 
 
@@ -49,10 +50,18 @@ class InjectedCrash(BaseException):
 
 #: write-path injection points, named after the store method they gate.
 #: ``cas_meta`` is `compare_and_put_meta` — the refs commit step.
-WRITE_POINTS = ("put_pod", "put_manifest", "put_meta", "cas_meta")
+#: ``cas_lease`` is the same call aimed at the lease blob
+#: (core/lease.py): splitting the point keeps the PR-6 crash matrix
+#: (which arms ``cas_meta`` and expects the refs CAS) deterministic
+#: while letting the lease matrix kill lease traffic specifically —
+#: renewal-loss is ``transient`` here, an expiry race is ``latency``
+#: here plus a short TTL.
+WRITE_POINTS = ("put_pod", "put_manifest", "put_meta", "cas_meta",
+                "cas_lease")
 #: read-path points (transient/latency only; reads have no torn mode —
-#: they never mutate the store).
-READ_POINTS = ("get_pod", "get_manifest", "get_meta")
+#: they never mutate the store).  ``get_lease`` is `get_meta` on the
+#: lease blob, split from ``get_meta`` for the same reason as above.
+READ_POINTS = ("get_pod", "get_manifest", "get_meta", "get_lease")
 
 
 @dataclasses.dataclass
@@ -292,14 +301,15 @@ class FaultyStore(BaseStore):
         raise InjectedCrash(f"crash at put_meta[{f.when}] {key}")
 
     def get_meta(self, key: str) -> Optional[bytes]:
-        f = self._fire("get_meta")
+        point = "get_lease" if key == _LEASES_KEY else "get_meta"
+        f = self._fire(point)
         if f is not None and f.mode == "transient":
-            raise f.exc(f"injected transient error: get_meta {key}")
+            raise f.exc(f"injected transient error: {point} {key}")
         return self.inner.get_meta(key)
 
     def compare_and_put_meta(self, key: str, expected_old: Optional[bytes],
                              new: bytes) -> bool:
-        f = self._fire("cas_meta")
+        f = self._fire("cas_lease" if key == _LEASES_KEY else "cas_meta")
         if f is None:
             return self.inner.compare_and_put_meta(key, expected_old, new)
         if f.mode == "transient":
@@ -317,11 +327,88 @@ class FaultyStore(BaseStore):
     def sweep_tmp(self) -> int:
         return self.inner.sweep_tmp()
 
+    def head(self) -> Optional[int]:
+        return self.inner.head()
+
     def repair_head(self) -> bool:
         return self.inner.repair_head()
 
     def total_bytes(self) -> int:
         return self.inner.total_bytes()
+
+
+# ---------------------------------------------------------------------------
+# lease protocol fault injection (kill-mid-lease / renewal-loss / races)
+# ---------------------------------------------------------------------------
+
+#: every lease protocol operation the manager lands via blob CAS, in the
+#: order a writer (acquire → set_intent → clear_intent, renew from the
+#: heartbeat) and a sweeper (acquire → begin_sweep → end_sweep → release)
+#: issue them.  ``reap`` is the takeover/fsck path.
+LEASE_OPS = ("acquire", "renew", "release", "set_intent", "clear_intent",
+             "begin_sweep", "end_sweep", "reap")
+
+
+def lease_matrix_points() -> List[Tuple[str, str]]:
+    """Every (op, when) a lease holder can be killed at, in protocol
+    order.  ``before`` = the blob CAS never landed (the op is invisible
+    to peers); ``after`` = it landed and the holder died immediately —
+    the orphaned lease/intent/phase must expire and be reaped."""
+    out: List[Tuple[str, str]] = []
+    for op in ("acquire", "set_intent", "clear_intent", "renew",
+               "begin_sweep", "end_sweep"):
+        out.append((op, "before"))
+        out.append((op, "after"))
+    return out
+
+
+class LeaseFaultInjector:
+    """Op-level kill switch for the lease protocol.
+
+    Plugs into ``LeaseManager(op_hook=...)``: the manager calls it as
+    ``hook(op, "before")`` just before each landed blob CAS and
+    ``hook(op, "after")`` right after, so arming ``("set_intent",
+    "after")`` models a writer that registered its intent and died —
+    exactly the orphaned-intent debris fsck must reap.  Store-level
+    flavors (torn lease blob, renewal-loss, latency races) belong to
+    `FaultyStore`'s ``cas_lease``/``get_lease`` points; this class
+    covers the *protocol-step* axis the store wrapper cannot see.
+    """
+
+    def __init__(self) -> None:
+        self._armed: List[Dict[str, Any]] = []
+        self._lock = threading.Lock()
+        self.calls: Dict[Tuple[str, str], int] = {}
+
+    def arm(self, op: str, when: str = "before", skip: int = 0) -> None:
+        if op not in LEASE_OPS:
+            raise ValueError(f"unknown lease op {op!r}")
+        if when not in ("before", "after"):
+            raise ValueError(f"unknown lease fault side {when!r}")
+        with self._lock:
+            self._armed.append({"op": op, "when": when, "skip": skip,
+                                "fired": False})
+
+    def clear(self) -> None:
+        with self._lock:
+            self._armed = []
+            self.calls = {}
+
+    @property
+    def n_fired(self) -> int:
+        with self._lock:
+            return sum(1 for a in self._armed if a["fired"])
+
+    def __call__(self, op: str, when: str) -> None:
+        with self._lock:
+            key = (op, when)
+            i = self.calls.get(key, 0)
+            self.calls[key] = i + 1
+            for a in self._armed:
+                if (a["op"] == op and a["when"] == when
+                        and not a["fired"] and i >= a["skip"]):
+                    a["fired"] = True
+                    raise InjectedCrash(f"crash at lease {op}[{when}]")
 
 
 # ---------------------------------------------------------------------------
@@ -336,12 +423,26 @@ class RetryPolicy:
     filesystems and object stores throw for recoverable conditions.
     `InjectedCrash` subclasses BaseException precisely so no retry policy
     can resurrect a dead process.  ``max_retries=0`` disables retrying.
+
+    ``jitter`` spreads the backoff by a uniform ±fraction so N losers of
+    the same CAS race don't all retry in lockstep (the thundering-herd
+    fix the contention path needs); 0 keeps delays deterministic.
     """
 
     max_retries: int = 3
     backoff_s: float = 0.005
     multiplier: float = 2.0
     retry_on: tuple = (OSError,)
+    jitter: float = 0.0
+
+    def delay(self, attempt: int) -> float:
+        """Sleep before retry number ``attempt`` (0-based): jittered
+        exponential ``backoff_s * multiplier**attempt``."""
+        d = self.backoff_s * (self.multiplier ** attempt)
+        if self.jitter:
+            import random
+            d *= 1.0 + random.uniform(-self.jitter, self.jitter)
+        return max(d, 0.0)
 
 
 def call_with_retries(fn: Callable[[], Any], policy: RetryPolicy,
@@ -349,7 +450,6 @@ def call_with_retries(fn: Callable[[], Any], policy: RetryPolicy,
                       ) -> Tuple[Any, int]:
     """Run `fn`, retrying per `policy`.  Returns ``(result, n_retries)``;
     re-raises the last error once retries are exhausted."""
-    delay = policy.backoff_s
     attempt = 0
     while True:
         try:
@@ -357,6 +457,5 @@ def call_with_retries(fn: Callable[[], Any], policy: RetryPolicy,
         except policy.retry_on:
             if attempt >= policy.max_retries:
                 raise
+            sleep(policy.delay(attempt))
             attempt += 1
-            sleep(delay)
-            delay *= policy.multiplier

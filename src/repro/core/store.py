@@ -67,6 +67,8 @@ class StoreStats:
         # meta CAS counters (refs commit protocol)
         self.meta_cas_ok = 0
         self.meta_cas_conflicts = 0
+        # stale CAS lockfiles broken (dead-pid / aged-out; file backend)
+        self.meta_locks_broken = 0
 
     def as_dict(self) -> Dict[str, Any]:
         return dict(self.__dict__)
@@ -218,6 +220,11 @@ class BaseStore:
         when no writer is concurrently active (fsck's contract)."""
         return 0
 
+    def head(self) -> Optional[int]:
+        """The backend's legacy HEAD pointer, if it keeps one (newest
+        TimeID written); None for backends without one."""
+        return None
+
     def repair_head(self) -> bool:
         """Rebuild the backend's legacy HEAD pointer (if it keeps one)
         from the manifests actually present; True if anything changed."""
@@ -308,13 +315,25 @@ class FileStore(BaseStore):
     and the containing directory before it counts as landed (durability
     against power loss, not just process death).  `compare_and_put_meta`
     serializes cross-process via an O_EXCL ``.lock`` file next to the
-    blob; a lock abandoned by a crashed process is debris that
-    `sweep_tmp` (and therefore fsck) clears.
+    blob.  Each lock records ``"<pid> <wall time>"`` so a lock abandoned
+    by a crashed process is *detected*, not waited out: a contender that
+    finds the recorded pid dead (same-host check via ``kill(pid, 0)``),
+    the lock older than ``STALE_LOCK_AGE_S``, or the content unparseable
+    (a legacy/torn lock with no provable owner) breaks it safely —
+    `os.replace` to a unique trash name, so exactly one breaker wins
+    even when several race — and retries the O_EXCL create.  A *live*
+    peer's lock is honored up to ``LOCK_TIMEOUT_S``.  `sweep_tmp` (and
+    therefore fsck) applies the same staleness test, so it can run
+    while writers are active without breaking their critical sections.
     """
 
-    #: how long compare_and_put_meta spins on another process's lock
-    #: before declaring it stale/stuck.
+    #: how long compare_and_put_meta spins on another LIVE process's
+    #: lock before giving up (the critical section is microseconds; a
+    #: live holder stuck this long is pathological).
     LOCK_TIMEOUT_S = 5.0
+    #: a lock older than this is stale even if its owner pid is alive
+    #: (the pid may have been recycled, or the owner hung mid-CAS).
+    STALE_LOCK_AGE_S = 5.0
 
     def __init__(self, root: str, compress: bool = False,
                  fsync: bool = False) -> None:
@@ -418,6 +437,61 @@ class FileStore(BaseStore):
     def put_meta(self, key: str, data: bytes) -> None:
         self._write_atomic(self._meta_path(key), data)
 
+    # -- stale-lock detection ---------------------------------------------
+    @staticmethod
+    def _pid_alive(pid: int) -> bool:
+        """Same-host liveness probe: signal 0 never delivers, only
+        checks.  PermissionError means the pid exists under another
+        uid — alive."""
+        try:
+            os.kill(pid, 0)
+        except ProcessLookupError:
+            return False
+        except (PermissionError, OSError):
+            return True
+        return True
+
+    def _lock_is_stale(self, lock_path: str) -> bool:
+        """True if the lock's recorded owner is provably dead, the lock
+        has aged out, or the content is unparseable (legacy empty locks,
+        torn writes — no provable owner means no one to honor)."""
+        try:
+            with open(lock_path) as f:
+                pid_s, ts_s = f.read().split()
+            pid, ts = int(pid_s), float(ts_s)
+        except FileNotFoundError:
+            return False              # gone already: nothing to break
+        except (OSError, ValueError):
+            # unparseable — usually EMPTY: either a torn/legacy lock, or
+            # a live peer caught between its O_EXCL create and the
+            # owner-stamp write.  Only age can tell those apart, so the
+            # lock is honored until its mtime ages out.
+            try:
+                age = time.time() - os.path.getmtime(lock_path)
+            except OSError:
+                return False
+            return age > self.STALE_LOCK_AGE_S
+        if not self._pid_alive(pid):
+            return True
+        return (time.time() - ts) > self.STALE_LOCK_AGE_S
+
+    def _break_lock(self, lock_path: str) -> bool:
+        """Steal a stale lock atomically: rename to a unique trash name
+        first, so when several contenders break the same lock exactly
+        one `os.replace` wins and no one ever unlinks a FRESH lock a
+        peer just created at the original path."""
+        trash = f"{lock_path}.stale-{os.getpid()}-{time.monotonic_ns()}"
+        try:
+            os.replace(lock_path, trash)
+        except FileNotFoundError:
+            return False                  # someone else broke it first
+        try:
+            os.remove(trash)
+        except FileNotFoundError:  # pragma: no cover - nothing shares trash
+            pass
+        self.stats.meta_locks_broken += 1
+        return True
+
     def compare_and_put_meta(self, key: str, expected_old: Optional[bytes],
                              new: bytes) -> bool:
         lock_path = self._meta_path(key) + ".lock"
@@ -426,14 +500,21 @@ class FileStore(BaseStore):
             try:
                 fd = os.open(lock_path,
                              os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+                # record ownership so a crash here leaves a lock peers
+                # can prove stale (pid liveness) instead of waiting out
+                os.write(fd, f"{os.getpid()} {time.time():.6f}".encode())
                 break
             except FileExistsError:
+                if self._lock_is_stale(lock_path):
+                    self._break_lock(lock_path)
+                    continue              # retry the O_EXCL create now
                 if time.monotonic() > deadline:
                     raise TimeoutError(
                         f"meta lock {lock_path} held past "
-                        f"{self.LOCK_TIMEOUT_S}s — stale lock from a "
-                        "crashed writer?  Run fsck (it sweeps .lock "
-                        "debris) or remove the file.")
+                        f"{self.LOCK_TIMEOUT_S}s by a live process — "
+                        "a peer hung mid-CAS?  (Dead-owner and aged "
+                        "locks are broken automatically; fsck sweeps "
+                        "stale .lock debris too.)")
                 time.sleep(0.002)
         try:
             if self.get_meta(key) != expected_old:
@@ -444,7 +525,13 @@ class FileStore(BaseStore):
             return True
         finally:
             os.close(fd)
-            os.unlink(lock_path)
+            try:
+                os.unlink(lock_path)
+            except FileNotFoundError:
+                # a peer (wrongly, but per policy) aged this lock out and
+                # broke it mid-section — the CAS result above still
+                # stands; crashing the holder here would only add damage.
+                pass
 
     def get_meta(self, key: str) -> Optional[bytes]:
         try:
@@ -495,9 +582,18 @@ class FileStore(BaseStore):
         n = 0
         for dirpath, _, files in os.walk(self.root):
             for fn in files:
-                if fn.endswith(".tmp") or fn.endswith(".lock"):
+                path = os.path.join(dirpath, fn)
+                if fn.endswith(".lock"):
+                    # only provably-stale locks: a LIVE writer's CAS
+                    # critical section must survive a concurrent fsck
+                    # (multi-writer stores run fsck-on-open while peers
+                    # are active).
+                    if self._lock_is_stale(path) and self._break_lock(path):
+                        n += 1
+                    continue
+                if fn.endswith(".tmp") or ".lock.stale-" in fn:
                     try:
-                        os.remove(os.path.join(dirpath, fn))
+                        os.remove(path)
                         n += 1
                     except FileNotFoundError:
                         pass

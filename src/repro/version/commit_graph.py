@@ -36,19 +36,29 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Any, Dict, Iterable, List, Optional, Set, Union
 
 import msgpack
 
+from ..core.faults import RetryPolicy
 from ..core.store import BaseStore
 
 REFS_META_KEY = "refs"
 DEFAULT_BRANCH = "main"
-#: CAS attempts before giving up on a refs mutation.  A single writer
-#: never conflicts; N writers make progress because every conflict means
-#: someone else's mutation landed (lock-free progress guarantee), so 8
-#: lost races in a row signals something pathological, not contention.
+#: default CAS attempts before giving up on a refs mutation.  A single
+#: writer never conflicts; N writers make progress because every
+#: conflict means someone else's mutation landed (lock-free progress
+#: guarantee) — but an N-writer fleet hammering one refs blob CAN lose
+#: more than 8 races honestly, so the budget is per-DAG configurable
+#: (``max_cas_retries``) and losers back off with jitter
+#: (``cas_backoff``) instead of retrying in lockstep.
 MAX_CAS_RETRIES = 8
+#: default loser backoff: jittered exponential so N losers of the same
+#: race don't re-collide on the next attempt (reuses `RetryPolicy`'s
+#: delay schedule; the first couple of retries are nearly free).
+DEFAULT_CAS_BACKOFF = RetryPolicy(backoff_s=0.0005, multiplier=2.0,
+                                  jitter=0.5)
 
 Ref = Union[str, int]
 
@@ -79,9 +89,18 @@ class CommitDAG:
     """Persisted commit graph + refs over a content-addressed store."""
 
     def __init__(self, store: BaseStore,
-                 default_branch: str = DEFAULT_BRANCH) -> None:
+                 default_branch: str = DEFAULT_BRANCH, *,
+                 max_cas_retries: Optional[int] = None,
+                 cas_backoff: Optional[RetryPolicy] = None) -> None:
         self.store = store
         self.default_branch = default_branch
+        self.max_cas_retries = (MAX_CAS_RETRIES if max_cas_retries is None
+                                else int(max_cas_retries))
+        self.cas_backoff = (DEFAULT_CAS_BACKOFF if cas_backoff is None
+                            else cas_backoff)
+        #: cumulative refs CAS races lost (and rebased) by this DAG —
+        #: the contention benchmark's lost-race metric.
+        self.n_cas_races = 0
         self.branches: Dict[str, int] = {}
         self.tags: Dict[str, int] = {}
         #: current branch name, or None when HEAD is detached
@@ -181,7 +200,8 @@ class CommitDAG:
         branch) re-executes against the reloaded state, which is exactly
         the semantics a lock would have given.
         """
-        for _ in range(MAX_CAS_RETRIES):
+        for attempt in range(self.max_cas_retries):
+            local_head, local_detached = self.head_branch, self.detached
             out = mutate()
             blob = self._pack_refs()
             if blob == self._refs_blob:
@@ -190,10 +210,22 @@ class CommitDAG:
                                                self._refs_blob, blob):
                 self._refs_blob = blob
                 return out
-            self._load_refs()                # lost the race: rebase
+            # lost the race: back off with jitter (losers of the same
+            # conflict must not retry in lockstep), then rebase.
+            self.n_cas_races += 1
+            if attempt:
+                time.sleep(self.cas_backoff.delay(attempt - 1))
+            self._load_refs()
+            # the rebase keeps THIS writer's checkout: the blob's
+            # head_branch is whichever peer wrote last, and adopting it
+            # would make the retried mutation advance the *peer's*
+            # branch with our commit.  HEAD in the blob stays
+            # last-writer-wins (it only seeds a fresh open).
+            self.head_branch, self.detached = local_head, local_detached
         raise RefsCASError(
-            f"refs CAS lost {MAX_CAS_RETRIES} races in a row — "
-            "a stuck writer or a livelocked store?")
+            f"refs CAS lost {self.max_cas_retries} races in a row — "
+            "a stuck writer or a livelocked store?  (Raise "
+            "max_cas_retries for heavily contended stores.)")
 
     def reload(self) -> None:
         """Re-read refs and drop the parent cache.  For callers that know
@@ -203,12 +235,29 @@ class CommitDAG:
             self._parents = {}
             self._load_refs()
 
+    def sync(self) -> None:
+        """Re-read refs from the store, keeping THIS process's checkout
+        (head_branch / detached) — the cross-process refresh: GC's mark
+        phase must see every peer's branch tips, but must not move the
+        local HEAD onto whichever branch a peer touched last.  The
+        parent cache survives (commits are immutable; `refresh` fills in
+        new ones)."""
+        with self._lock:
+            local_head, local_detached = self.head_branch, self.detached
+            self._load_refs()
+            self.head_branch, self.detached = local_head, local_detached
+
     def refresh(self) -> None:
-        """Fill the parent cache from every manifest in the store."""
+        """Fill the parent cache from every manifest in the store.  A
+        manifest listed but gone by the time it's read (a peer swept it
+        between the two calls) is skipped, not an error."""
         with self._lock:
             for tid in self.store.list_time_ids():
                 if tid not in self._parents:
-                    m = self.store.get_manifest(tid)
+                    try:
+                        m = self.store.get_manifest(tid)
+                    except (KeyError, FileNotFoundError):
+                        continue
                     self._parents[tid] = m.get("parent")
 
     # ------------------------------------------------------------------
@@ -315,10 +364,23 @@ class CommitDAG:
     # ------------------------------------------------------------------
     # lineage
     # ------------------------------------------------------------------
-    def parent(self, tid: int) -> Optional[int]:
+    def parent(self, tid: int, *, missing_ok: bool = False) -> Optional[int]:
+        """Parent TimeID of `tid` (None at the root).  With `missing_ok`
+        a missing manifest reads as parentless instead of raising — the
+        GC mark needs this: an intent-pinned in-flight commit can
+        outlive a sweep that reclaimed its (already-dead) ancestors, so
+        a later walk from it must stop, not crash.  The miss is NOT
+        cached: the manifest may simply not be written yet, and a
+        cached None would hide its real parent from the next mark."""
         with self._lock:
             if tid not in self._parents:
-                self._parents[tid] = self.store.get_manifest(tid).get("parent")
+                try:
+                    m = self.store.get_manifest(tid)
+                except (KeyError, FileNotFoundError):
+                    if not missing_ok:
+                        raise
+                    return None
+                self._parents[tid] = m.get("parent")
             return self._parents[tid]
 
     def ancestors(self, tid: int) -> List[int]:
@@ -376,8 +438,14 @@ class CommitDAG:
     # ------------------------------------------------------------------
     # pod-granular diff + reachability
     # ------------------------------------------------------------------
-    def pod_digests_of(self, tid: int) -> Set[str]:
-        m = self.store.get_manifest(tid)
+    def pod_digests_of(self, tid: int, *, missing_ok: bool = False
+                       ) -> Set[str]:
+        try:
+            m = self.store.get_manifest(tid)
+        except (KeyError, FileNotFoundError):
+            if not missing_ok:
+                raise
+            return set()
         return {meta["d"] for meta in m.get("pods", {}).values()}
 
     def diff(self, a: Ref, b: Ref) -> PodDelta:
@@ -404,23 +472,26 @@ class CommitDAG:
             out.update(t for t in extra if t is not None)
             return out
 
-    def live_commits(self, extra_roots: Iterable[Optional[int]] = ()
-                     ) -> Set[int]:
-        """Commits reachable from any root by parent pointers."""
+    def live_commits(self, extra_roots: Iterable[Optional[int]] = (),
+                     *, missing_ok: bool = False) -> Set[int]:
+        """Commits reachable from any root by parent pointers.  The GC
+        mark passes `missing_ok`: under multi-writer contention a walk
+        can legitimately cross a manifest a previous sweep reclaimed
+        (see `parent`)."""
         live: Set[int] = set()
         for root in self.roots(extra_roots):
             cur: Optional[int] = root
             while cur is not None and cur not in live:
                 live.add(cur)
-                cur = self.parent(cur)
+                cur = self.parent(cur, missing_ok=missing_ok)
         return live
 
-    def reachable_digests(self, extra_roots: Iterable[Optional[int]] = ()
-                          ) -> Set[str]:
+    def reachable_digests(self, extra_roots: Iterable[Optional[int]] = (),
+                          *, missing_ok: bool = False) -> Set[str]:
         """Pod digests referenced by any live commit (the GC mark set)."""
         out: Set[str] = set()
-        for tid in self.live_commits(extra_roots):
-            out |= self.pod_digests_of(tid)
+        for tid in self.live_commits(extra_roots, missing_ok=missing_ok):
+            out |= self.pod_digests_of(tid, missing_ok=missing_ok)
         return out
 
     def forget(self, time_ids: Iterable[int]) -> None:

@@ -31,7 +31,17 @@ A crash can therefore leave, in decreasing order of likelihood:
     torn (every childless complete tip becomes a branch — the
     `CommitDAG` bootstrap rule);
   * sweeps incomplete manifests (manifests-first crash ordering), empty
-    and — in deep mode — corrupt pods, and all ``.tmp``/``.lock`` debris;
+    and — in deep mode — corrupt pods, and ``.tmp``/stale-``.lock``
+    debris;
+  * **reaps dead writers**: every expired lease (core/lease.py) is
+    removed along with its save intents, and a crashed sweeper's stuck
+    ``gc_phase: "sweep"`` is reset — the store-level counterpart of
+    breaking a dead process's CAS lockfile.  The reaped writer's
+    in-flight pods become plain unreferenced orphans, swept by the same
+    ``sweep_orphans`` path that handles torn 1→2-window debris.  A
+    LIVE lease (an active peer) is honored end to end: its intent tids
+    are not classified/swept even when their pods are still landing,
+    and its intent digests are excluded from the orphan sweep.
   * repairs the file backend's legacy ``HEAD`` pointer.
 
 Quick mode (default) checks existence and non-emptiness of every
@@ -41,9 +51,11 @@ verifies it deserializes, which is the only way to catch a torn pod
 whose truncated bytes are non-empty; run it after an unclean shutdown on
 a backend without atomic renames, or whenever paranoia is cheap.
 
-fsck assumes no concurrent writer (it is an *open*/restart-path tool,
-like its filesystem namesake).  The refs CAS still protects it against a
-racing repair of the same store.
+fsck's exclusivity contract is now lease-shaped: refs repair was always
+CAS-protected, and with live-lease awareness plus the stale-only lock
+sweep the default scan is safe to run on open while peers hold writer
+leases.  ``sweep_orphans=True`` remains exclusive-access-only (a
+leaseless legacy writer mid-save still looks identical to debris).
 """
 from __future__ import annotations
 
@@ -53,6 +65,7 @@ from typing import Any, Dict, List, Optional, Set, Tuple
 
 import msgpack
 
+from ..core.lease import LEASES_META_KEY, LeaseManager
 from ..core.store import BaseStore
 from .commit_graph import DEFAULT_BRANCH, REFS_META_KEY
 
@@ -88,18 +101,26 @@ class FsckReport:
     n_tmp_removed: int = 0
     n_manifests_swept: int = 0
     n_pods_swept: int = 0
+    #: expired leases reaped (dead writers/sweepers), live leases seen,
+    #: and whether a crashed sweeper's stuck "sweep" phase was reset.
+    leases_reaped: List[str] = dataclasses.field(default_factory=list)
+    n_leases_live: int = 0
+    gc_phase_reset: bool = False
     swept_pod_digests: List[str] = dataclasses.field(default_factory=list)
     t_scan: float = 0.0
     t_repair: float = 0.0
 
     @property
     def clean(self) -> bool:
-        """True iff the store needed no classification and no repair."""
+        """True iff the store needed no classification and no repair.
+        A live lease is not damage (an active peer); a reaped one is
+        (a writer died holding it)."""
         return not (self.incomplete or self.empty_pods or self.corrupt_pods
                     or self.refs_rolled_back or self.refs_deleted
                     or self.refs_rebuilt or self.legacy_head_repaired
                     or self.n_tmp_removed or self.n_manifests_swept
-                    or self.n_pods_swept)
+                    or self.n_pods_swept or self.leases_reaped
+                    or self.gc_phase_reset)
 
     def as_dict(self) -> Dict[str, Any]:
         d = {k: v for k, v in self.__dict__.items()
@@ -135,17 +156,39 @@ def _pod_state(store: BaseStore, digest_hex: str, deep: bool,
 
 
 def fsck(store: BaseStore, *, repair: bool = True, deep: bool = False,
-         sweep_orphans: bool = False) -> FsckReport:
+         sweep_orphans: bool = False, reap_leases: bool = True,
+         leases: Optional[LeaseManager] = None) -> FsckReport:
     """Scan `store` for torn-save damage; repair and sweep if asked.
 
     Returns an `FsckReport`.  With ``sweep_orphans=True`` pods referenced
     by *no* manifest at all are also deleted (off by default: a pod
-    parked by a crashed 1→2-window save is harmless, and a concurrent
+    parked by a crashed 1→2-window save is harmless, and a leaseless
     writer mid-save would look identical — only enable when the caller
-    owns the store exclusively, e.g. the crash-matrix harness).
+    owns the store exclusively, e.g. the crash-matrix harness).  Pods
+    and tids pinned by a LIVE lease's save intent are never classified
+    as damage or swept, so the default scan coexists with active peers.
+
+    ``reap_leases`` (with ``repair``) removes expired leases and their
+    orphaned intents — dead writers' liveness debris; pass a configured
+    `LeaseManager` via ``leases`` to share its clock/owner (tests drive
+    expiry with a fake clock), else one is built on the store's default
+    wall clock.
     """
     rep = FsckReport(deep=deep, repaired=repair)
     t0 = _time.perf_counter()
+
+    # ---- 0. lease debris: reap dead writers, honor live ones ----------
+    live_tids: Set[int] = set()
+    live_digests: Set[str] = set()
+    if store.get_meta(LEASES_META_KEY) is not None:
+        mgr = leases if leases is not None else LeaseManager(store)
+        if repair and reap_leases:
+            resets0 = mgr.n_phase_resets
+            rep.leases_reaped = mgr.reap_expired()
+            rep.gc_phase_reset = mgr.n_phase_resets > resets0
+        t, d = mgr.live_intents()
+        live_tids, live_digests = set(t), set(d)
+        rep.n_leases_live = len(mgr.live_leases())
 
     # ---- 1. classify every manifest -----------------------------------
     pod_cache: Dict[str, str] = {}
@@ -157,6 +200,8 @@ def fsck(store: BaseStore, *, repair: bool = True, deep: bool = False,
             m = store.get_manifest(tid)
             digs = {meta["d"] for meta in m.get("pods", {}).values()}
         except Exception:
+            if tid in live_tids:
+                continue      # a live peer's save is mid-landing, not torn
             rep.incomplete[tid] = "torn manifest"
             continue
         parents[tid] = m.get("parent")
@@ -168,7 +213,10 @@ def fsck(store: BaseStore, *, repair: bool = True, deep: bool = False,
             if state != "ok" and bad is None:
                 bad = f"{state} pod {d}"
         if bad is not None:
-            rep.incomplete[tid] = bad
+            if tid in live_tids:
+                rep.missing_pods.pop(tid, None)   # in-flight, not damage
+            else:
+                rep.incomplete[tid] = bad
         else:
             complete[tid] = digs
     rep.n_commits_complete = len(complete)
@@ -318,6 +366,7 @@ def fsck(store: BaseStore, *, repair: bool = True, deep: bool = False,
     if sweep_orphans:
         referenced = set().union(*complete.values()) if complete else set()
         bad_pods |= {d for d in store.list_pods() if d not in referenced}
+    bad_pods -= live_digests      # pinned by a live peer's save intent
     for d in sorted(bad_pods):
         if store.has_pod(d):
             store.delete_pod(d)

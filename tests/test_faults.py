@@ -105,17 +105,53 @@ def test_cas_many_writers_memory():
     assert store.get_meta("n") == b"200"
 
 
-def test_cas_stale_lock_times_out(tmp_path, monkeypatch):
+def test_cas_breaks_stale_locks_and_honors_live_ones(tmp_path, monkeypatch):
+    import subprocess
+    import sys
+    import time
+
     store = FileStore(str(tmp_path))
     store.put_meta("k", b"v")
-    # a crashed writer left its lock behind: the CAS must not hang forever
-    open(store._meta_path("k") + ".lock", "wb").close()
-    monkeypatch.setattr(FileStore, "LOCK_TIMEOUT_S", 0.2)
-    with pytest.raises(TimeoutError, match="fsck"):
-        store.compare_and_put_meta("k", b"v", b"w")
-    # fsck's debris sweep clears it, after which the CAS proceeds
-    assert store.sweep_tmp() >= 1
+    lock = store._meta_path("k") + ".lock"
+
+    # empty lock (a writer killed inside the O_EXCL create): unparseable,
+    # broken once its mtime ages out — the CAS proceeds instead of
+    # hanging forever.  (A FRESH empty lock is honored: it may be a live
+    # peer between its create and the owner-stamp write.)
+    open(lock, "wb").close()
+    old = time.time() - 10 * FileStore.STALE_LOCK_AGE_S
+    os.utime(lock, (old, old))
     assert store.compare_and_put_meta("k", b"v", b"w")
+    assert store.stats.meta_locks_broken == 1
+
+    # dead-pid lock: the crashed writer's pid no longer exists.
+    p = subprocess.Popen([sys.executable, "-c", ""])
+    p.wait()
+    with open(lock, "w") as f:
+        f.write(f"{p.pid} {time.time():.6f}")
+    assert store.compare_and_put_meta("k", b"w", b"x")
+    assert store.stats.meta_locks_broken == 2
+
+    # wedged-but-alive holder: broken once the lock outlives the age cap.
+    monkeypatch.setattr(FileStore, "STALE_LOCK_AGE_S", 0.05)
+    with open(lock, "w") as f:
+        f.write(f"{os.getpid()} {time.time() - 1.0:.6f}")
+    assert store.compare_and_put_meta("k", b"x", b"y")
+    assert store.stats.meta_locks_broken == 3
+
+    # a LIVE lock (fresh timestamp, live pid) is honored: the CAS waits
+    # and times out rather than stealing a running peer's critical
+    # section.  Nothing is broken; removing the lock unblocks the CAS.
+    monkeypatch.setattr(FileStore, "STALE_LOCK_AGE_S", 60.0)
+    monkeypatch.setattr(FileStore, "LOCK_TIMEOUT_S", 0.2)
+    with open(lock, "w") as f:
+        f.write(f"{os.getpid()} {time.time():.6f}")
+    with pytest.raises(TimeoutError):
+        store.compare_and_put_meta("k", b"y", b"z")
+    assert store.stats.meta_locks_broken == 3
+    os.remove(lock)
+    assert store.compare_and_put_meta("k", b"y", b"z")
+    assert store.get_meta("k") == b"z"
 
 
 def test_head_tolerates_corruption_and_repairs(tmp_path):

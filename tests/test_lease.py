@@ -1,0 +1,462 @@
+"""Multi-writer leases: fencing tokens, save intents, the sweep fence,
+and the lease-protocol crash matrix.
+
+The unit half drives `LeaseManager` with a fake clock (expiry, takeover,
+fencing are pure time arithmetic — no sleeps).  The crash matrix kills a
+holder at every (op, before|after) protocol step via
+`LeaseFaultInjector`, then "reboots" (fresh Chipmink, fsck-on-open) and
+asserts the PR contract: no committed pod is ever swept, refs always
+name a complete commit, the dead holder's debris is reaped once its
+lease expires, and the store stays writable.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (Chipmink, FileStore, InjectedCrash,
+                        LeaseFaultInjector, LeaseHeld, LeaseLost,
+                        LeaseManager, MemoryStore, RetryPolicy,
+                        lease_matrix_points)
+from repro.core.faults import FaultyStore
+from repro.core.lease import LEASES_META_KEY
+from repro.version import CommitDAG, RefsCASError
+
+
+class FakeClock:
+    def __init__(self, t: float = 1000.0) -> None:
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+# ---------------------------------------------------------------------------
+# lease mechanics (fake clock, no store I/O beyond MemoryStore)
+# ---------------------------------------------------------------------------
+
+def test_writer_leases_shared_fenced_and_expiring():
+    store = MemoryStore()
+    clk = FakeClock()
+    a = LeaseManager(store, owner="a", ttl_s=10, clock=clk)
+    b = LeaseManager(store, owner="b", ttl_s=10, clock=clk)
+    la = a.acquire_writer()
+    lb = b.acquire_writer()            # shared: writers coexist
+    assert lb.fence > la.fence         # monotone fence counter
+    a.check(la)
+    b.check(lb)
+    assert set(a.live_leases()) == {la.lease_id, lb.lease_id}
+    clk.advance(8)
+    a.renew(la)                        # a stays alive past b's expiry
+    clk.advance(3)
+    with pytest.raises(LeaseLost):
+        b.check(lb)
+    with pytest.raises(LeaseLost):
+        b.renew(lb)
+    assert a.reap_expired() == [lb.lease_id]
+    a.check(la)
+    a.release(la)
+    a.release(la)                      # idempotent on a gone lease
+    assert a.live_leases() == []
+
+
+def test_gc_lease_exclusive_takeover_and_fencing():
+    store = MemoryStore()
+    clk = FakeClock()
+    a = LeaseManager(store, owner="a", ttl_s=5, clock=clk)
+    b = LeaseManager(store, owner="b", ttl_s=5, clock=clk)
+    ga = a.acquire_gc()
+    with pytest.raises(LeaseHeld):
+        b.acquire_gc()                 # exclusive while live
+    clk.advance(6)                     # a's collector died
+    gb = b.acquire_gc()                # takeover reaps + fences past it
+    assert b.n_takeovers == 1
+    assert gb.fence > ga.fence
+    with pytest.raises(LeaseLost):
+        a.renew(ga)                    # the dead collector is fenced out
+    with pytest.raises(LeaseLost):
+        a.begin_sweep(ga)              # and can never reach a sweep
+
+
+def test_intents_pin_and_sweep_fence_blocks_registration():
+    store = MemoryStore()
+    clk = FakeClock()
+    w = LeaseManager(store, owner="w", ttl_s=50, clock=clk)
+    g = LeaseManager(store, owner="g", ttl_s=50, clock=clk)
+    lw = w.acquire_writer()
+    w.set_intent(lw, time_ids=[7], digests=["aa", "bb"])
+    assert w.live_intents() == ({7}, {"aa", "bb"})
+
+    lg = g.acquire_gc()
+    pin_t, pin_d = g.begin_sweep(lg)   # snapshot atomic with phase flip
+    assert (pin_t, pin_d) == ({7}, {"aa", "bb"})
+    assert g.gc_sweeping()
+
+    done = []
+
+    def register():
+        w.set_intent(lw, time_ids=[8], digests=["cc"])
+        done.append(True)
+
+    th = threading.Thread(target=register, daemon=True)
+    th.start()
+    time.sleep(0.1)
+    assert not done                    # parked behind the live sweep
+    g.end_sweep(lg)
+    th.join(timeout=10)
+    assert done and w.live_intents() == ({8}, {"cc"})
+    assert w.n_sweep_waits > 0
+    g.release(lg)
+    assert not g.gc_sweeping()
+
+
+def test_dead_sweeper_reaped_inline_by_set_intent():
+    store = MemoryStore()
+    clk = FakeClock()
+    w = LeaseManager(store, owner="w", ttl_s=100, clock=clk)
+    g = LeaseManager(store, owner="g", ttl_s=5, clock=clk)
+    lw = w.acquire_writer()
+    lg = g.acquire_gc()
+    g.begin_sweep(lg)
+    clk.advance(6)                     # sweeper died mid-sweep; expired
+    w.set_intent(lw, time_ids=[1], digests=["aa"])   # reaps, no block
+    assert w.n_phase_resets == 1
+    assert not w.gc_sweeping()
+    assert w.live_leases() == [lw.lease_id]
+
+
+def test_torn_lease_blob_is_soft_state():
+    store = MemoryStore()
+    m = LeaseManager(store, ttl_s=5)
+    lease = m.acquire_writer()
+    store.put_meta(LEASES_META_KEY, b"\xc1garbage")   # torn write
+    # liveness lost (the holder must re-acquire), correctness intact:
+    # the manager rebuilds an empty blob instead of crashing.
+    with pytest.raises(LeaseLost):
+        m.check(lease)
+    l2 = m.acquire_writer()
+    m.check(l2)
+
+
+def test_store_level_lease_faults_are_isolated_from_meta():
+    fs = FaultyStore(MemoryStore())
+    m = LeaseManager(fs)
+    lease = m.acquire_writer()
+    fs.arm("cas_lease", "crash-before")
+    with pytest.raises(InjectedCrash):
+        m.renew(lease)
+    fs.clear()
+    m.check(lease)                     # the CAS never landed; still held
+    m.renew(lease)
+
+
+# ---------------------------------------------------------------------------
+# integration: Chipmink(multi_writer=True)
+# ---------------------------------------------------------------------------
+
+def _small_state(fill: float):
+    return {"w": np.full((32, 8), np.float32(fill)),
+            "b": np.arange(16, dtype=np.float32) + np.float32(fill),
+            "step": int(fill)}
+
+
+def _assert_state(loaded, fill: float):
+    assert loaded["step"] == int(fill)
+    assert np.array_equal(loaded["w"], np.full((32, 8), np.float32(fill)))
+    assert np.array_equal(loaded["b"],
+                          np.arange(16, dtype=np.float32) + np.float32(fill))
+
+
+def test_gc_pins_intent_held_pods_and_reclaims_after_clear():
+    store = MemoryStore()
+    ck = Chipmink(store=store, use_kernel=False, multi_writer=True,
+                  lease_heartbeat=False)
+    ck.save(_small_state(1.0))
+    # a peer mid-save: pod written, manifest not yet landed — to a
+    # leaseless GC this is sweepable orphan debris.
+    peer = LeaseManager(store, owner="peer", ttl_s=60)
+    lp = peer.acquire_writer()
+    store.put_pod("feedface", b"x" * 64)
+    peer.set_intent(lp, time_ids=[999], digests=["feedface"])
+
+    dry = ck.gc(dry_run=True)
+    assert dry.n_pods_pinned == 1      # dry run honors the intent too
+    stats = ck.gc()
+    assert stats.n_pods_pinned == 1
+    assert stats.gc_fence is not None
+    assert store.has_pod("feedface")
+
+    peer.clear_intent(lp)              # the peer's refs CAS landed
+    stats2 = ck.gc()
+    assert stats2.n_pods_pinned == 0
+    assert not store.has_pod("feedface")
+
+
+def test_commit_racing_the_sweep_fence_forces_remark():
+    """A peer that fully commits — refs CAS landed, intent cleared —
+    while the collector is between its mark and its sweep must never
+    lose the fresh commit's pods.  The fence-then-validate order
+    guarantees it: the peer's refs movement fails the post-fence
+    validation, the collector drops the fence and re-marks."""
+    from repro.version import mark_and_sweep
+    store = MemoryStore()
+    ck = Chipmink(store=store, use_kernel=False, multi_writer=True,
+                  lease_heartbeat=False)
+    ck.save(_small_state(1.0))
+    ck.wait()
+    peer = Chipmink(store=store, use_kernel=False, multi_writer=True,
+                    lease_heartbeat=False, fsck_on_open=False)
+    peer.checkout("main")
+    peer.branch("peer")
+
+    committed = []
+
+    def commit_now():                  # runs inside the GC's window
+        if not committed:
+            committed.append(peer.save(_small_state(7.0)))
+            peer.wait()                # refs CAS done, intent cleared
+
+    stats = mark_and_sweep(store, ck.versions, extra_roots=(ck._head,),
+                           leases=ck.leases, _after_mark=commit_now)
+    assert stats.n_mark_restarts >= 1  # the movement was caught
+    _assert_state(peer.load(time_id=committed[0]), 7.0)
+    assert not ck.leases.gc_sweeping()  # fence dropped on the restart
+    peer.close()
+    ck.close()
+
+
+def test_time_ids_unique_across_instances():
+    store = MemoryStore()
+    a = Chipmink(store=store, use_kernel=False, multi_writer=True,
+                 lease_heartbeat=False)
+    b = Chipmink(store=store, use_kernel=False, multi_writer=True,
+                 lease_heartbeat=False, fsck_on_open=False)
+    tids = [a.save(_small_state(1.0)), b.save(_small_state(2.0)),
+            a.save(_small_state(3.0)), b.save(_small_state(4.0))]
+    assert len(set(tids)) == 4         # the CAS counter never double-mints
+    assert sorted(tids) == sorted(store.list_time_ids())
+    a.close()
+    b.close()
+    assert LeaseManager(store).live_leases() == []
+
+
+def test_heartbeat_renewal_loss_then_reacquire():
+    store = MemoryStore()
+    ck = Chipmink(store=store, use_kernel=False, multi_writer=True,
+                  lease_ttl_s=0.15)
+    t1 = ck.save(_small_state(1.0))
+    lease1 = ck._writer_lease
+    hb = ck._heartbeat
+    assert hb is not None and not hb.lost
+    # renewal loss: a peer's (buggy or fencing) mutation drops the lease
+    peer = LeaseManager(store, owner="peer")
+    peer._mutate(lambda blob: blob["leases"].pop(lease1.lease_id, None))
+    deadline = time.time() + 10
+    while not hb.lost and time.time() < deadline:
+        time.sleep(0.01)
+    assert hb.lost                     # the beat noticed and stopped
+    # the next save re-acquires under a new fence and still lands
+    t2 = ck.save(_small_state(2.0))
+    assert ck._writer_lease.fence > lease1.fence
+    assert ck.versions.head_commit() == t2
+    _assert_state(ck.load(time_id=t1), 1.0)
+    ck.close()
+
+
+def test_lease_expiry_race_aborts_before_refs_cas():
+    """A writer paused long enough to lose its lease mid-save (GC pause,
+    SIGSTOP) must abort at the fencing gate: refs never advance."""
+    store = MemoryStore()
+    ck = Chipmink(store=store, use_kernel=False, multi_writer=True,
+                  lease_heartbeat=False)
+    t1 = ck.save(_small_state(1.0))
+    fired = []
+
+    def hook(op, when):
+        if op == "set_intent" and when == "after" and not fired:
+            fired.append(True)        # fence the writer out right after
+            lid = ck._writer_lease.lease_id
+            ck.leases._mutate(lambda blob: blob["leases"].pop(lid, None))
+
+    ck.leases._op_hook = hook
+    with pytest.raises(LeaseLost):
+        ck.save(_small_state(2.0))
+    assert fired
+    assert ck.versions.head_commit() == t1
+    ck.leases._op_hook = None
+    t3 = ck.save(_small_state(3.0))    # recovers: re-acquire + clean save
+    assert ck.versions.head_commit() == t3
+    _assert_state(ck.load(time_id=t3), 3.0)
+
+
+def test_aliased_pod_swept_before_intent_is_rewritten():
+    """The dedup race: the thesaurus says alias, but a pre-intent sweep
+    deleted the blob.  The save must rewrite it, not reference a hole."""
+    store = MemoryStore()
+    ck = Chipmink(store=store, use_kernel=False, multi_writer=True,
+                  lease_heartbeat=False)
+    t1 = ck.save(_small_state(1.0))
+    ck.save(_small_state(2.0))
+    # delete t1-only pods behind the thesaurus' back (a racing GC whose
+    # snapshot predates this writer's intent)
+    m1 = store.get_manifest(t1)
+    live = {m["d"] for m in store.get_manifest(t1 + 1)["pods"].values()}
+    doomed = [m["d"] for m in m1["pods"].values() if m["d"] not in live]
+    assert doomed
+    for d in doomed:
+        store.delete_pod(d)
+    store.delete_manifest(t1)
+    # saving state 1.0 again dedups against the swept digests — the
+    # has_pod re-verify after the intent must catch and rewrite them
+    t3 = ck.save(_small_state(1.0))
+    assert ck.save_stats[-1]["n_alias_rewrites"] >= 1
+    _assert_state(ck.load(time_id=t3), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# the lease-protocol crash matrix
+# ---------------------------------------------------------------------------
+
+TTL = 0.3
+
+
+def _open(root, hook=None, fsck_on_open=False):
+    ck = Chipmink(store=FileStore(root), use_kernel=False,
+                  multi_writer=True, lease_heartbeat=False,
+                  lease_ttl_s=TTL, fsck_on_open=fsck_on_open)
+    if hook is not None:
+        ck.leases._op_hook = hook
+    return ck
+
+
+@pytest.mark.parametrize("op,when", lease_matrix_points(),
+                         ids=lambda v: str(v))
+def test_lease_crash_matrix(tmp_path, op, when):
+    """Kill the holder on either side of every lease protocol CAS, then
+    reboot after the TTL: every committed state still loads bit-exact,
+    refs name a complete commit, the dead holder's lease/intent/phase
+    debris is reaped by fsck, and saves + GC still work."""
+    root = str(tmp_path)
+    ck1 = _open(root)
+    tids, fills = [], []
+    for fill in (1.0, 2.0):
+        tids.append(ck1.save(_small_state(fill)))
+        fills.append(fill)
+    ck1.close()
+
+    inj = LeaseFaultInjector()
+    ck2 = _open(root, hook=inj)
+    if op in ("acquire", "set_intent", "clear_intent"):
+        inj.arm(op, when)
+        with pytest.raises(InjectedCrash):
+            ck2.save(_small_state(3.0))
+        if op == "clear_intent":
+            # the refs CAS landed before the clear: the save COMMITTED
+            tids.append(tids[-1] + 1)
+            fills.append(3.0)
+        expect_head = tids[-1]
+    elif op == "renew":
+        tids.append(ck2.save(_small_state(3.0)))
+        fills.append(3.0)
+        inj.arm(op, when)
+        with pytest.raises(InjectedCrash):
+            ck2.leases.renew(ck2._writer_lease)
+        expect_head = tids[-1]
+    else:                              # begin_sweep / end_sweep
+        tids.append(ck2.save(_small_state(3.0)))
+        fills.append(3.0)
+        sweeper = LeaseManager(FileStore(root), owner="sweeper",
+                               ttl_s=TTL, op_hook=inj)
+        lg = sweeper.acquire_gc()
+        if op == "end_sweep":
+            sweeper.begin_sweep(lg)
+        inj.arm(op, when)
+        with pytest.raises(InjectedCrash):
+            getattr(sweeper, op)(lg)
+        expect_head = tids[-1]
+    assert inj.n_fired == 1
+
+    # ---- reboot after every leftover lease expired ----
+    time.sleep(TTL + 0.1)
+    ck3 = _open(root, fsck_on_open=True)
+    rep = ck3.last_fsck
+    if (op, when) != ("acquire", "before"):
+        assert rep.leases_reaped       # the dead holder's lease record
+    assert ck3.leases.live_leases() == []
+    expect_reset = (op, when) in {("begin_sweep", "after"),
+                                  ("end_sweep", "before")}
+    assert rep.gc_phase_reset == expect_reset
+    assert not ck3.leases.gc_sweeping()
+
+    # refs name a complete commit; nothing committed was lost
+    assert ck3.versions.head_commit() == expect_head
+    for tid, fill in zip(tids, fills):
+        _assert_state(ck3.load(time_id=tid), fill)
+
+    # the store stays fully usable: save chains on, GC runs, and every
+    # commit still loads bit-exact afterwards
+    tids.append(ck3.save(_small_state(9.0)))
+    fills.append(9.0)
+    gc_stats = ck3.gc()
+    assert gc_stats.gc_fence is not None
+    for tid, fill in zip(tids, fills):
+        _assert_state(ck3.load(time_id=tid), fill)
+    assert ck3.fsck().leases_reaped == []
+    ck3.close()
+
+
+# ---------------------------------------------------------------------------
+# refs CAS budget + jittered backoff (satellite: configurable retries)
+# ---------------------------------------------------------------------------
+
+def test_refs_cas_budget_and_backoff_configurable(monkeypatch):
+    store = MemoryStore()
+    CommitDAG(store).record(1, None)   # prime refs
+    dag = CommitDAG(store, max_cas_retries=3,
+                    cas_backoff=RetryPolicy(backoff_s=0.01, multiplier=2.0,
+                                            jitter=0.0))
+    monkeypatch.setattr(store, "compare_and_put_meta",
+                        lambda key, old, new: False)   # every race lost
+    sleeps = []
+    monkeypatch.setattr("repro.version.commit_graph.time.sleep",
+                        sleeps.append)
+    with pytest.raises(RefsCASError, match="max_cas_retries"):
+        dag.record(2, 1)
+    assert dag.n_cas_races == 3
+    assert sleeps == [0.01, 0.02]      # delay(0), delay(1); first is free
+
+
+def test_retry_policy_jitter_bounds():
+    p = RetryPolicy(backoff_s=0.1, multiplier=2.0, jitter=0.5)
+    for attempt in range(4):
+        base = 0.1 * 2.0 ** attempt
+        for _ in range(25):
+            d = p.delay(attempt)
+            assert 0.5 * base <= d <= 1.5 * base
+    # jitter=0 keeps the schedule deterministic (crash-matrix replay)
+    assert RetryPolicy(backoff_s=0.1, jitter=0.0).delay(2) == 0.4
+
+
+def test_refs_rebase_keeps_local_checkout(tmp_path):
+    """A writer rebasing a lost refs race must not adopt the peer's
+    head_branch — its commit belongs on ITS branch."""
+    store = FileStore(str(tmp_path))
+    a = CommitDAG(store)
+    a.record(1, None)                  # main @ 1
+    b = CommitDAG(store)
+    a.create_branch("left")            # a is now on "left"
+    b.sync()                           # b sees "left" but stays on main
+    assert b.head_branch == "main" and "left" in b.branches
+    a.record(3, 1)                     # left @ 3; b's CAS base is stale
+    # b commits; the CAS loses and rebases — and must keep b on main,
+    # not hop onto a's branch and clobber left
+    b.record(2, 1)
+    assert b.n_cas_races >= 1
+    assert b.head_branch == "main"
+    b_fresh = CommitDAG(store)
+    assert b_fresh.branches["main"] == 2
+    assert b_fresh.branches["left"] == 3

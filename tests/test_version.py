@@ -485,9 +485,15 @@ def test_mark_and_sweep_extra_roots_protect_detached_commits():
     ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12)
     t1 = ck.save(state)
     dag = CommitDAG(ck.store)
-    dag.branches.clear()                      # simulate: no refs at all
-    dag.head_branch = None
-    dag.detached = None
+    # simulate: no refs at all — in the STORE, not just in memory: the
+    # mark re-reads refs from the store (cross-process soundness), so a
+    # hand-cleared in-memory DAG alone would be resurrected by sync().
+    import msgpack
+    from repro.version.commit_graph import REFS_META_KEY
+    ck.store.put_meta(REFS_META_KEY, msgpack.packb(
+        {"branches": {}, "tags": {}, "head_branch": None,
+         "detached": None}, use_bin_type=True))
+    dag.reload()
 
     dry = mark_and_sweep(ck.store, dag, extra_roots=(t1,), dry_run=True)
     assert dry.n_pods_deleted == 0            # extra root keeps everything
