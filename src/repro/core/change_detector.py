@@ -8,17 +8,28 @@ makes that sound.
 The digest phase runs through the batched, size-bucketed engine
 (`kernels.batch`): one Pallas dispatch per word-width bucket over all
 chunks of all leaves, and a **single** `jax.device_get` for all (C, 4)
-digest rows per save — no per-leaf host syncs.  The host diff is a
-vectorized numpy matrix compare against a persistent key-indexed digest
-table (`self._table` / `self._index`); per-key dict probes survive only
-for slot→previous-row mapping and table upkeep, not for the compare
-itself.  Set ``batched=False`` to fall back to the per-leaf oracle path
+digest rows per save — no per-leaf host syncs.
+
+With ``fused=True`` (default) the *compare* also runs on device: the
+previous digest table stays resident on device (`kernels.batch.
+DeviceTable`, in the steady state simply the previous save's kernel
+output), the bucket kernel emits a dirty bitmask alongside the digests,
+and the packed word rows of *speculated* chunks (the caller's
+flip-EMA prediction, see `volatility.FlipTracker`) are compacted into
+the same fetch — so digests, dirty mask, and likely-dirty payload bytes
+all arrive in the one `jax.device_get`.  The host-side numpy compare
+against ``self._table`` survives as the fallback rung for rows the
+kernel did not cover (host-numpy leaves, ``fused=False``), and the host
+table itself remains the source of truth persisted into manifests.
+
+Set ``batched=False`` to fall back to the per-leaf oracle path
 (`ops.leaf_fingerprint`), which is also what never-before-seen inactive
 chunks use.
 
-Output: the new digest table + the set of dirty chunk keys + the number
-of device syncs paid.  Dirty chunks determine dirty pods; clean pods
-become synonym records (no payload write, no device→host transfer).
+Output: the new digest table + the set of dirty chunk keys + speculated
+payload bytes + the number of device syncs paid.  Dirty chunks determine
+dirty pods; clean pods become synonym records (no payload write, no
+device→host transfer).
 """
 from __future__ import annotations
 
@@ -63,20 +74,31 @@ class ChangeReport:
     active_chunks: int = 0
     skipped_chunks: int = 0
     n_syncs: int = 0                   # blocking device fetches this save
+    #: speculatively prefetched payload bytes (chunk key -> exact bytes),
+    #: compacted into the digest fetch by the fused path
+    payload: Dict[str, bytes] = dataclasses.field(default_factory=dict)
+    n_spec_hits: int = 0               # dirty chunks whose bytes were fetched
+    n_spec_misses: int = 0             # dirty chunks needing a corrective gather
+    fused_rows: int = 0                # slot rows dirty-resolved on device
 
 
 class ChangeDetector:
     def __init__(self, *, chunk_bytes: int = 1 << 22, seed: int = 0,
                  use_kernel: bool = True, interpret: bool = True,
-                 batched: bool = True):
+                 batched: bool = True, fused: bool = True):
         self.chunk_bytes = chunk_bytes
         self.seed = seed
         self.use_kernel = use_kernel
         self.interpret = interpret
         self.batched = batched
+        self.fused = fused and batched
         # persistent key-indexed digest table: uint32 (N, 4) + key -> row
         self._table: Optional[np.ndarray] = None
         self._index: Dict[str, int] = {}
+        # device-resident mirror of the previous digest table in bucket-
+        # slot order (fused path); None = re-seed from the host table on
+        # the next detect (one async H2D upload, no blocking sync).
+        self._dev_table = None
         # leaf key -> chunk count fully present in the table (fast check
         # for "has every chunk of this inactive leaf been seen before")
         self._seen_leaves: Dict[str, int] = {}
@@ -99,7 +121,14 @@ class ChangeDetector:
         makes the very next `save()` diff against the *checked-out* state
         — only chunks actually mutated after the checkout come out dirty —
         without re-fingerprinting anything.
+
+        The device-resident mirror is dropped: it reflects the pre-
+        checkout state.  The next fused detect re-seeds the device table
+        from the imported host table (`kernels.batch.seed_device_table`,
+        async upload), so the first post-checkout save still runs the
+        fused single-sync path — never a silent host-compare fallback.
         """
+        self._dev_table = None
         keys = list(digests)
         table = np.empty((len(keys), 4), np.uint32)
         seen_leaves: Dict[str, int] = {}
@@ -112,14 +141,32 @@ class ChangeDetector:
         self._seen_leaves = seen_leaves
 
     # ------------------------------------------------------------------
-    def _digest(self, leaves: List[Node], graph: ObjectGraph
+    def _lookup_digest(self, key: str) -> Optional[bytes]:
+        """Previous digest of a chunk key from the host table, or None."""
+        i = self._index.get(key)
+        if i is None or self._table is None:
+            return None
+        return self._table[i].tobytes()
+
+    def _digest(self, leaves: List[Node], graph: ObjectGraph,
+                speculate: Optional[Set[str]] = None
                 ) -> kbatch.DigestResult:
         """Digest all chunks of `leaves` → slot-ordered DigestResult.
 
-        Batched mode: bucketed kernels + one device sync total.  Oracle
-        mode: per-leaf kernel calls + one sync per device leaf.
+        Fused mode: bucketed digest+compare kernels against the device-
+        resident previous table, speculated payloads compacted into the
+        one device sync.  Batched mode: bucketed kernels + one device
+        sync total.  Oracle mode: per-leaf kernel calls + one sync per
+        device leaf.
         """
         items = [(leaf.key, graph.arrays[leaf.key]) for leaf in leaves]
+        if self.fused:
+            res, self._dev_table = kbatch.digest_leaves_fused(
+                items, chunk_bytes=self.chunk_bytes, seed=self.seed,
+                use_kernel=self.use_kernel, interpret=self.interpret,
+                table=self._dev_table, lookup=self._lookup_digest,
+                spec_keys=speculate)
+            return res
         if self.batched:
             return kbatch.digest_leaves(
                 items, chunk_bytes=self.chunk_bytes, seed=self.seed,
@@ -149,7 +196,8 @@ class ChangeDetector:
 
     # ------------------------------------------------------------------
     def detect(self, graph: ObjectGraph,
-               active_leaf_paths: Optional[Set[str]] = None) -> ChangeReport:
+               active_leaf_paths: Optional[Set[str]] = None,
+               speculate: Optional[Set[str]] = None) -> ChangeReport:
         # 1. choose the leaves to digest: every active leaf, plus any
         # inactive leaf with chunks the table has never seen (those must
         # be digested now; their already-seen siblings still inherit).
@@ -163,22 +211,33 @@ class ChangeDetector:
             elif self._seen_leaves.get(lkey) != len(leaf.children):
                 digest_leaves.append(leaf)
 
-        res = self._digest(digest_leaves, graph)
+        res = self._digest(digest_leaves, graph, speculate)
         C = len(res.keys)
 
-        # 2. vectorized diff: (C, 4) matrix compare against the
-        # persistent table.  Rows with no previous entry are dirty.
-        if C:
-            prev_rows = np.fromiter(
-                (self._index.get(k, -1) for k in res.keys),
-                dtype=np.int64, count=C)
-        else:
-            prev_rows = np.zeros((0,), np.int64)
+        # 2. dirtiness per slot row.  Fused path: the kernel already
+        # compared against the device-resident previous table — trust its
+        # bitmask for every row it covered.  Remaining rows (host leaves,
+        # non-fused modes) take the vectorized host diff against the
+        # persistent table; rows with no previous entry are dirty.
         changed = np.ones(C, dtype=bool)
-        have = prev_rows >= 0
-        if self._table is not None and have.any():
-            idx = prev_rows[have]
-            changed[have] = (res.mat[have] != self._table[idx]).any(axis=1)
+        unknown = np.ones(C, dtype=bool)
+        fused_rows = 0
+        kernel_dirty = getattr(res, "dirty", None)
+        if kernel_dirty is not None and C:
+            known = kernel_dirty >= 0
+            changed[known] = kernel_dirty[known] > 0
+            unknown = ~known
+            fused_rows = int(known.sum())
+        if unknown.any() and self._table is not None:
+            idx_unknown = np.nonzero(unknown)[0]
+            prev_rows = np.fromiter(
+                (self._index.get(res.keys[i], -1) for i in idx_unknown),
+                dtype=np.int64, count=len(idx_unknown))
+            have = prev_rows >= 0
+            if have.any():
+                sub = idx_unknown[have]
+                changed[sub] = (res.mat[sub]
+                                != self._table[prev_rows[have]]).any(axis=1)
         buf = res.mat.tobytes()
 
         # 3. assemble the new digest table + dirty set, walking chunk
@@ -230,6 +289,15 @@ class ChangeDetector:
         self._table = table
         self._index = {k: i for i, k in enumerate(new_keys)}
         self._seen_leaves = seen_leaves
+
+        # 5. speculation accounting: payload rows that turned out dirty
+        # are hits (their bytes already crossed the link); dirty chunks
+        # outside the payload will need a corrective gather.
+        payload = getattr(res, "payload", None) or {}
+        hits = sum(1 for k in dirty if k in payload)
         return ChangeReport(digests=digests, dirty=dirty,
                             active_chunks=active, skipped_chunks=skipped,
-                            n_syncs=res.n_syncs)
+                            n_syncs=res.n_syncs, payload=payload,
+                            n_spec_hits=hits,
+                            n_spec_misses=len(dirty) - hits,
+                            fused_rows=fused_rows)

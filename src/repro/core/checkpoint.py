@@ -38,6 +38,20 @@ with the *delta*, mirroring the device half's batched digest engine:
     assignment, thesaurus) is race-free.  Thesaurus/store mutation is
     additionally serialized under the namespace lock ``l_ns``.
 
+Single-sync save (``fused=True``, default)
+------------------------------------------
+The device half of a save is one round-trip: the fused digest kernels
+compare against the device-resident previous table and the packed word
+rows of *speculated* chunks (flip-EMA above ``spec_threshold``, expanded
+to pod granularity plus the pods of changed scalars) ride along in the
+same `jax.device_get` as the digests and dirty bitmask.  The gather
+phase then serializes written pods from those prefetched bytes; only
+mispredicted-dirty chunks pay one corrective batched fetch
+(``n_corrective_syncs``), so a warm sparse save costs exactly one
+blocking device sync and any save at most two.  ``fused=False``
+restores the two-sync path (digest fetch + payload gather); manifests
+are bit-identical either way.
+
 Ablation switches (`enable_cd`, `enable_avf`, `async_mode`) exist to
 reproduce the paper's §8.8/§8.9 baselines (NoCD/AVF, OnlyCD, OnlyAVF,
 Sync); `incremental=False` restores the from-scratch host path.
@@ -159,13 +173,13 @@ from .active_filter import ActiveVariableFilter
 from .async_saver import AsyncSaver
 from .change_detector import ChangeDetector, pack_digest_table
 from .faults import RetryPolicy, call_with_retries
-from .graph import ObjectGraph, build_graph, rebuild_tree
+from .graph import CHUNK, ObjectGraph, build_graph, rebuild_tree
 from .graph_cache import GraphCache, IncrementalBuildInfo
 from .lease import Lease, LeaseHeartbeat, LeaseLost, LeaseManager
 from .lga import LGA, PoddingPolicy
 from .podding import (PodAssignment, Unpodder, batched_chunk_fetch,
-                      open_manifest, pod_graph, pod_structural_digest,
-                      serialize_pod)
+                      fused_chunk_fetch, open_manifest, pod_graph,
+                      pod_structural_digest, serialize_pod)
 from .store import BaseStore, MemoryStore
 from .thesaurus import PodThesaurus
 from .volatility import FlipTracker
@@ -192,6 +206,8 @@ class Chipmink:
         async_mode: bool = False,
         async_depth: int = 2,
         incremental: bool = True,
+        fused: bool = True,
+        spec_threshold: float = 0.25,
         track_flips: bool = True,
         copy_on_submit_bytes: int = 1 << 20,
         seed: int = 0,
@@ -212,7 +228,9 @@ class Chipmink:
         self.async_mode = async_mode
         self.incremental = incremental
         self.detector = ChangeDetector(chunk_bytes=chunk_bytes, seed=seed,
-                                       use_kernel=use_kernel)
+                                       use_kernel=use_kernel, fused=fused)
+        self.fused = self.detector.fused
+        self.spec_threshold = spec_threshold
         self.thesaurus = PodThesaurus(capacity_bytes=thesaurus_capacity)
         self.tracker = FlipTracker() if track_flips else None
         self.avf = ActiveVariableFilter()
@@ -432,6 +450,45 @@ class Chipmink:
                         self._writer_lease = None
             raise
 
+    def _speculate(self, graph: ObjectGraph,
+                   ginfo: Optional[IncrementalBuildInfo]) -> Optional[Set[str]]:
+        """Speculative dirty set for the fused single-sync save.
+
+        Seeds: chunk keys whose flip EMA exceeds ``spec_threshold``
+        (`FlipTracker.predicted`) plus keys of scalars the incremental
+        build saw change (their pods re-serialize this save even though
+        no chunk flipped — the step counter is the canonical case).
+
+        The seed set is then expanded to **pod granularity** against the
+        previous assignment: `serialize_pod` needs every chunk of a
+        written pod, so speculating a chunk without its pod siblings
+        would still pay the corrective gather.  Expansion requires the
+        previous assignment to still describe this graph — same
+        condition as assignment reuse (no structural change); otherwise
+        speculation is skipped (a from-scratch save is all-dirty anyway
+        and pays its one corrective gather).
+        """
+        if not self.fused or self.tracker is None:
+            return None
+        asg = self._prev_pods
+        if (asg is None or ginfo is None or ginfo.from_scratch
+                or ginfo.structural_change):
+            return None
+        seeds = self.tracker.predicted(self.spec_threshold)
+        seeds.update(ginfo.scalar_changed_keys)
+        pods: Set[int] = set()
+        for key in seeds:
+            nid = graph.by_key.get(key)
+            if nid is not None and nid in asg.node_pod:
+                pods.add(asg.node_pod[nid])
+        out: Set[str] = set()
+        for pid in pods:
+            for nid in asg.pods[pid].node_ids:
+                node = graph.node(nid)
+                if node.kind == CHUNK:
+                    out.add(node.key)
+        return out or None
+
     def _save_body_inner(self, time_id, graph, ginfo, accessed_vars,
                          touched_prefixes, readonly_paths, parent,
                          t_graph, n_leaf_copies=0) -> None:
@@ -458,11 +515,16 @@ class Chipmink:
         stats["t_avf"] = _time.perf_counter() - t0
 
         t0 = _time.perf_counter()
-        report = self.detector.detect(graph, active)
+        spec = self._speculate(graph, ginfo)
+        report = self.detector.detect(graph, active, speculate=spec)
         stats["n_chunks"] = len(report.digests)
         stats["n_dirty_chunks"] = len(report.dirty)
         stats["t_digest"] = _time.perf_counter() - t0
         stats["n_digest_syncs"] = report.n_syncs
+        stats["n_spec_predicted"] = len(spec) if spec else 0
+        stats["n_spec_hits"] = report.n_spec_hits
+        stats["n_spec_misses"] = report.n_spec_misses
+        stats["n_fused_rows"] = report.fused_rows
 
         if self.tracker is not None:
             active_chunks = [n.key for n in graph.chunk_nodes()
@@ -583,12 +645,22 @@ class Chipmink:
                     n_alias_rewrites += 1
         stats["n_alias_rewrites"] = n_alias_rewrites
 
-        # gather phase: ONE batched device fetch for every chunk of every
-        # dirty pod (clean pods never touch the device).
+        # gather phase.  Fused path: payload bytes of speculated chunks
+        # already arrived with the digest fetch; only mispredicted chunks
+        # pay one corrective batched fetch (zero when speculation covered
+        # every written pod — the single-sync save).  Non-fused: ONE
+        # batched device fetch for every chunk of every dirty pod (clean
+        # pods never touch the device either way).
         t0 = _time.perf_counter()
         gather_nodes = [graph.node(nid) for pod, _, _ in to_write
                         for nid in pod.node_ids]
-        chunk_bytes_of, gather_syncs = batched_chunk_fetch(graph, gather_nodes)
+        if self.fused:
+            chunk_bytes_of, gather_syncs = fused_chunk_fetch(
+                graph, gather_nodes, report.payload)
+            stats["n_corrective_syncs"] = gather_syncs
+        else:
+            chunk_bytes_of, gather_syncs = batched_chunk_fetch(
+                graph, gather_nodes)
         stats["t_gather"] = _time.perf_counter() - t0
         stats["n_gather_syncs"] = gather_syncs
 

@@ -242,6 +242,28 @@ def batched_chunk_fetch(graph: ObjectGraph, nodes: Sequence[Node]
     return get, n_syncs
 
 
+def fused_chunk_fetch(graph: ObjectGraph, nodes: Sequence[Node],
+                      payload: Dict[str, bytes]
+                      ) -> Tuple[Callable[[Node], bytes], int]:
+    """Payload-first gather for the fused single-sync save.
+
+    `payload` holds the byte-exact chunk payloads that were speculatively
+    compacted into the digest fetch (`ChangeReport.payload`) — those cost
+    nothing here.  Only chunks *missing* from the payload (speculation
+    misses, host-numpy chunks) fall through to one corrective
+    `batched_chunk_fetch`.  Returns (lookup fn, corrective sync count:
+    0 when speculation covered every device chunk, else 1).
+    """
+    missing = [n for n in nodes if n.kind == CHUNK and n.key not in payload]
+    corrective, n_syncs = batched_chunk_fetch(graph, missing)
+
+    def get(node: Node) -> bytes:
+        b = payload.get(node.key)
+        return b if b is not None else corrective(node)
+
+    return get, n_syncs
+
+
 def serialize_pod(pod: Pod, graph: ObjectGraph, asg: PodAssignment,
                   chunk_bytes_of: Optional[Callable[[Node], bytes]] = None
                   ) -> bytes:

@@ -25,7 +25,7 @@ size/length/__dict__-length):
 from __future__ import annotations
 
 import re
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional, Set
 
 import numpy as np
 
@@ -208,6 +208,12 @@ class FlipTracker:
                 node = graph.nodes[graph.by_key[key]]
                 self.samples_X.append(node_features(node, graph, self.ema))
                 self.samples_y.append(flipped)
+
+    def predicted(self, threshold: float = 0.25) -> Set[str]:
+        """Chunk keys whose flip EMA exceeds `threshold` — the speculative
+        dirty set the fused save compacts into the digest fetch.  Keys
+        never observed are absent (no EMA → no prediction)."""
+        return {k for k, v in self.ema.items() if v > threshold}
 
     def fit_gbm(self, **kw) -> GBMVolatility:
         model = GBMVolatility(**kw)

@@ -27,6 +27,23 @@ object graph:
     a **single** `jax.device_get` at the end of the save (the
     single-sync contract; `DigestResult.n_syncs` reports it).
 
+The **fused single-sync** path (`digest_leaves_fused`) goes one step
+further: the previous save's digest table stays *resident on device*
+(`DeviceTable` — per-bucket (padded_rows, 4) arrays in slot order), the
+compare-against-previous runs inside the bucket kernel
+(`fingerprint.fingerprint_words_cmp` emits digests **plus** a dirty
+bitmask per bucket), and a speculative compaction gathers the packed
+word rows of likely-dirty chunks into dense per-bucket payload buffers —
+so digests, bitmask, and dirty-chunk payload all come back in **one**
+`jax.device_get`.  Because rows are pre-packed uint32 word streams and
+chunk boundaries are 4-byte aligned (`core.graph.chunk_grid`), a fetched
+row's first `true_length` bytes ARE the chunk's payload bytes — no second
+gather for speculated chunks.  In the steady state the device table is
+the previous save's own kernel output (zero host↔device table traffic);
+when the plan changes or the table was imported (post-checkout), it is
+re-seeded from the host table via one async H2D upload — never a
+blocking fetch.
+
 Host (numpy) leaves run through the same planner with the numpy digest
 twin — batching there amortizes the per-call weight-stream computation of
 `ref.fingerprint_words_np` across every row of a bucket.
@@ -45,8 +62,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.graph import ObjectGraph, chunk_grid
-from .fingerprint import TILE, fingerprint_words
-from .ref import fingerprint_words_np, fingerprint_words_ref
+from .fingerprint import TILE, fingerprint_words, fingerprint_words_cmp
+from .ref import (fingerprint_words_cmp_ref, fingerprint_words_np,
+                  fingerprint_words_ref)
 
 #: smallest bucket word width (512 B) — tiny leaves share one bucket
 MIN_BUCKET_WORDS = 128
@@ -223,6 +241,57 @@ class DigestResult:
         return self.leaf_rows[leaf_key] + chunk_index
 
 
+@dataclasses.dataclass
+class FusedDigestResult(DigestResult):
+    """DigestResult plus the fused-pass extras.
+
+    `dirty` is int8 per slot row: 1 dirty, 0 clean (kernel-compared
+    against a trusted previous digest), -1 unknown (host-group rows — the
+    caller falls back to its host compare for those).  `payload` maps
+    chunk keys of speculatively compacted rows to their exact payload
+    bytes (what `serialize_pod` would have gathered).
+    """
+    dirty: Optional[np.ndarray] = None
+    payload: Dict[str, bytes] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class DeviceTable:
+    """Previous digest table resident on device, in bucket-slot order.
+
+    In the steady state `digs` are the previous save's own kernel output
+    arrays (never re-uploaded); `valid` flags the rows whose previous
+    digest is real — a row seeded without a host entry compares against
+    zeros and is forced dirty by the caller.
+    """
+    plan: BatchPlan
+    digs: List[Any]                    # per bucket: uint32 (padded_rows, 4)
+    valid: List[np.ndarray]            # per bucket: bool (n_rows,)
+
+
+def seed_device_table(plan: BatchPlan,
+                      lookup) -> DeviceTable:
+    """Build the device-resident previous-digest table for `plan` from a
+    host digest lookup (chunk key -> 16-byte digest, or None when never
+    seen).  One async H2D upload per bucket — no blocking sync."""
+    keys, _ = _plan_slots(plan)
+    digs: List[Any] = []
+    valid: List[np.ndarray] = []
+    off = 0
+    for b in plan.buckets:
+        mat = np.zeros((b.padded_rows, 4), np.uint32)
+        v = np.zeros((b.n_rows,), bool)
+        for r in range(b.n_rows):
+            d = lookup(keys[off + r])
+            if d is not None:
+                mat[r] = np.frombuffer(d, np.uint32)
+                v[r] = True
+        digs.append(jnp.asarray(mat))
+        valid.append(v)
+        off += b.n_rows
+    return DeviceTable(plan=plan, digs=digs, valid=valid)
+
+
 def _digest_device(plan: BatchPlan, arrays: Sequence[Any], *, seed: int,
                    use_kernel: bool, interpret: bool) -> List[np.ndarray]:
     packed = _packer_for(plan)(*arrays)
@@ -303,6 +372,168 @@ def digest_leaves(items: Sequence[Tuple[str, Any]], *, chunk_bytes: int,
            else np.zeros((0, 4), np.uint32))
     return DigestResult(keys=keys, mat=mat, n_syncs=n_syncs,
                         leaf_rows=leaf_rows)
+
+
+def _digest_device_fused(plan: BatchPlan, arrays: Sequence[Any], *,
+                         seed: int, use_kernel: bool, interpret: bool,
+                         table: DeviceTable,
+                         spec_local: Dict[int, np.ndarray]):
+    """Fused per-bucket digest+compare plus speculative row compaction.
+
+    Returns (digest mats, dirty masks, {bucket idx: fetched spec rows},
+    new DeviceTable) after exactly ONE `jax.device_get` covering all
+    three result classes.
+    """
+    packed = _packer_for(plan)(*arrays)
+    lengths = _plan_lengths(plan)
+    digs_dev: List[Any] = []
+    masks_dev: List[Any] = []
+    spec_dev: List[Tuple[int, Any]] = []
+    for bi, (b, words, lens) in enumerate(zip(plan.buckets, packed,
+                                              lengths)):
+        prev = table.digs[bi]
+        if use_kernel:
+            d, m = fingerprint_words_cmp(words, jnp.asarray(lens), prev,
+                                         seed=seed, interpret=interpret,
+                                         tile=b.tile, rows=b.block_rows)
+        else:
+            d, m = fingerprint_words_cmp_ref(words, jnp.asarray(lens),
+                                             prev[:b.padded_rows],
+                                             seed=seed)
+        digs_dev.append(d)
+        masks_dev.append(m)
+        rows = spec_local.get(bi)
+        if rows is not None and len(rows):
+            # compaction: gather the packed word rows of the speculated
+            # chunks into one dense (n_spec, width) buffer.  Rows are
+            # already the chunk's uint32 word stream, so the buffer IS
+            # the payload (true byte lengths slice off padding on host).
+            spec_dev.append((bi, words[jnp.asarray(rows, jnp.int32)]))
+    host = jax.device_get([digs_dev, masks_dev,
+                           [m for _, m in spec_dev]])  # the ONE sync
+    dig_mats = [np.asarray(h, np.uint32)[:b.n_rows]
+                for b, h in zip(plan.buckets, host[0])]
+    masks = [np.asarray(h, np.uint8)[:b.n_rows]
+             for b, h in zip(plan.buckets, host[1])]
+    spec_rows = {bi: np.asarray(h)
+                 for (bi, _), h in zip(spec_dev, host[2])}
+    # padded digest rows stay on device as the next save's prev table:
+    # every digested row is now trusted.
+    new_table = DeviceTable(
+        plan=plan, digs=digs_dev,
+        valid=[np.ones((b.n_rows,), bool) for b in plan.buckets])
+    return dig_mats, masks, spec_rows, new_table
+
+
+def digest_leaves_fused(items: Sequence[Tuple[str, Any]], *,
+                        chunk_bytes: int, seed: int = 0,
+                        use_kernel: bool = True, interpret: bool = True,
+                        table: Optional[DeviceTable] = None,
+                        lookup=None,
+                        spec_keys: Optional[set] = None
+                        ) -> Tuple[FusedDigestResult,
+                                   Optional[DeviceTable]]:
+    """Fused single-sync digest of the given (leaf key, array) pairs.
+
+    Device leaves run the fused digest+compare kernel against the
+    device-resident previous table (`table` when its plan matches this
+    call's leaf specs, else re-seeded from `lookup`), with the packed
+    rows of `spec_keys` chunks compacted into the same fetch — ONE
+    blocking `jax.device_get` total.  Host leaves take the numpy twin
+    (dirty = -1: the caller's host compare decides).
+
+    Returns (result, new device table to carry to the next save).
+    """
+    dev: List[Tuple[str, Any]] = []
+    host: List[Tuple[str, Any]] = []
+    for key, arr in items:
+        (host if isinstance(arr, np.ndarray) else dev).append((key, arr))
+
+    keys: List[str] = []
+    mats: List[np.ndarray] = []
+    dirty_parts: List[np.ndarray] = []
+    leaf_rows: Dict[str, int] = {}
+    payload: Dict[str, bytes] = {}
+    new_table = table                  # preserved when no device leaves
+    n_syncs = 0
+    offset = 0
+    spec_keys = spec_keys or set()
+    for group, is_dev in ((dev, True), (host, False)):
+        if not group:
+            continue
+        specs = tuple(
+            (k, tuple(int(d) for d in a.shape), str(np.dtype(a.dtype)))
+            for k, a in group)
+        plan = plan_leaves(specs, chunk_bytes)
+        arrays = [a for _, a in group]
+        plan_keys, plan_offsets = _plan_slots(plan)
+        if is_dev:
+            if table is None or table.plan is not plan:
+                # plan changed (or table imported/never built): re-seed
+                # from the host table; rows it has never seen compare
+                # against zeros and are forced dirty below.
+                table = seed_device_table(
+                    plan, lookup if lookup is not None else lambda k: None)
+            # speculated chunk keys -> (bucket, local row)
+            spec_local: Dict[int, List[int]] = {}
+            bucket_base: List[int] = []
+            off = 0
+            for b in plan.buckets:
+                bucket_base.append(off)
+                off += b.n_rows
+            if spec_keys:
+                row_of = {k: r for r, k in enumerate(plan_keys)}
+                for k in spec_keys:
+                    r = row_of.get(k)
+                    if r is None:
+                        continue
+                    for bi in range(len(plan.buckets) - 1, -1, -1):
+                        if r >= bucket_base[bi]:
+                            spec_local.setdefault(bi, []).append(
+                                r - bucket_base[bi])
+                            break
+            spec_arr = {bi: np.asarray(sorted(rows), np.int64)
+                        for bi, rows in spec_local.items()}
+            # pad each gather to a power-of-two row count (repeating the
+            # first row) so the gather's jit cache stops recompiling when
+            # the speculation set fluctuates; extra rows are fetched and
+            # dropped (payload extraction walks only the real rows).
+            spec_padded = {
+                bi: np.concatenate(
+                    [r, np.full(pow2ceil(len(r)) - len(r), r[0], np.int64)])
+                for bi, r in spec_arr.items()}
+            dig_mats, masks, spec_fetched, new_table = _digest_device_fused(
+                plan, arrays, seed=seed, use_kernel=use_kernel,
+                interpret=interpret, table=table, spec_local=spec_padded)
+            n_syncs += 1
+            lengths = _plan_lengths(plan)
+            for bi, rows in spec_arr.items():
+                fetched = spec_fetched[bi]
+                lens = lengths[bi]
+                for i, r in enumerate(rows):
+                    key = plan_keys[bucket_base[bi] + int(r)]
+                    payload[key] = fetched[i].tobytes()[:int(lens[r])]
+            for bi, (b, m) in enumerate(zip(plan.buckets, masks)):
+                d = m.astype(np.int8)
+                d[~table.valid[bi]] = 1      # no trusted prev: dirty
+                dirty_parts.append(d)
+            mats.extend(dig_mats)
+        else:
+            mats.extend(_digest_host(plan, arrays, seed=seed))
+            dirty_parts.append(np.full((plan.n_chunks,), -1, np.int8))
+        keys.extend(plan_keys)
+        for lkey, row in plan_offsets:
+            leaf_rows[lkey] = offset + row
+        offset += plan.n_chunks
+
+    mat = (np.concatenate(mats, axis=0) if mats
+           else np.zeros((0, 4), np.uint32))
+    dirty = (np.concatenate(dirty_parts) if dirty_parts
+             else np.zeros((0,), np.int8))
+    res = FusedDigestResult(keys=keys, mat=mat, n_syncs=n_syncs,
+                            leaf_rows=leaf_rows, dirty=dirty,
+                            payload=payload)
+    return res, new_table
 
 
 def tree_fingerprint_batched(graph: ObjectGraph, *, active_leaf_paths=None,

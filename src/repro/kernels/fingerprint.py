@@ -26,6 +26,14 @@ The digest spec (and the oracle) live in ref.py; weighted sums are
 order-independent, so the sequential TPU grid can accumulate partial tile
 sums into the (rows, 4) output block, which is revisited across the inner
 grid dimension.
+
+The *fused* variant (`fingerprint_words_cmp`) additionally takes the
+previous save's digest block as an input and emits a per-row dirty flag
+alongside the digests: at the final inner grid step — when the (rows, 4)
+accumulator holds the complete digest — each row is compared against its
+previous digest and the (rows, 1) dirty block is written.  That moves the
+change *compare* on-device, so the host never needs the previous table to
+decide dirtiness (the single-sync save contract in batch.py/ops.py).
 """
 from __future__ import annotations
 
@@ -69,6 +77,77 @@ def _fingerprint_kernel(words_ref, lengths_ref, out_ref, *, seed: int,
     out_ref[...] += part
 
 
+def _fingerprint_cmp_kernel(words_ref, lengths_ref, prev_ref, out_ref,
+                            dirty_ref, *, seed: int, tile: int):
+    """Fused digest + compare.  Same grid/blocks as `_fingerprint_kernel`
+    plus a prev-digest input block (rows, DIGEST_WORDS) and a dirty output
+    block (rows, 1), both revisited along the inner grid dim.  The dirty
+    flag is written once, at the final inner step, when the accumulator
+    holds the full digest."""
+    _fingerprint_kernel(words_ref, lengths_ref, out_ref, seed=seed,
+                        tile=tile)
+
+    @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
+    def _compare():
+        diff = (out_ref[...] != prev_ref[...]).astype(jnp.uint32)
+        dirty_ref[...] = jnp.max(diff, axis=1, keepdims=True)
+
+
+def _pad_grid(words, lengths, tile, rows):
+    """Pad (C, W) words to the (rows, tile) grid; returns padded arrays
+    plus the original C (padding rows are digest-garbage, sliced off)."""
+    words = jnp.asarray(words, jnp.uint32)
+    C, W = words.shape
+    Wp = max(tile, -(-W // tile) * tile)
+    Cp = max(rows, -(-C // rows) * rows)
+    if Wp != W or Cp != C:
+        words = jnp.pad(words, ((0, Cp - C), (0, Wp - W)))
+    lengths2d = jnp.asarray(lengths, jnp.uint32).reshape(C, 1)
+    if Cp != C:
+        lengths2d = jnp.pad(lengths2d, ((0, Cp - C), (0, 0)))
+    return words, lengths2d, C, Cp, Wp
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("seed", "interpret", "tile", "rows"))
+def fingerprint_words_cmp(words: jnp.ndarray, lengths: jnp.ndarray,
+                          prev: jnp.ndarray, *, seed: int = 0,
+                          interpret: bool = True, tile: int = TILE,
+                          rows: int = 1):
+    """Fused digest-and-compare: uint32 words (C, W) + previous digests
+    (C, 4) -> (digests uint32 (C, 4), dirty uint32 (C,)).
+
+    dirty[c] == 1 iff digest[c] differs from prev[c] in any lane.  Rows
+    whose previous digest is unknown must be forced dirty by the caller
+    (the kernel compares against whatever sentinel was supplied).
+    """
+    words, lengths2d, C, Cp, Wp = _pad_grid(words, lengths, tile, rows)
+    prev = jnp.asarray(prev, jnp.uint32)
+    if Cp != C:
+        prev = jnp.pad(prev, ((0, Cp - C), (0, 0)))
+
+    grid = (Cp // rows, Wp // tile)
+    out, dirty = pl.pallas_call(
+        functools.partial(_fingerprint_cmp_kernel, seed=seed, tile=tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, tile), lambda i, j: (i, j)),
+            pl.BlockSpec((rows, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((rows, DIGEST_WORDS), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows, DIGEST_WORDS), lambda i, j: (i, 0)),
+            pl.BlockSpec((rows, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Cp, DIGEST_WORDS), jnp.uint32),
+            jax.ShapeDtypeStruct((Cp, 1), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(words, lengths2d, prev)
+    return out[:C], dirty[:C, 0]
+
+
 @functools.partial(jax.jit,
                    static_argnames=("seed", "interpret", "tile", "rows"))
 def fingerprint_words(words: jnp.ndarray, lengths: jnp.ndarray, *,
@@ -82,15 +161,7 @@ def fingerprint_words(words: jnp.ndarray, lengths: jnp.ndarray, *,
     `rows` chunks share one grid cell — the batched planner uses this to
     amortize dispatch across every chunk of every leaf in a bucket.
     """
-    words = jnp.asarray(words, jnp.uint32)
-    C, W = words.shape
-    Wp = max(tile, -(-W // tile) * tile)
-    Cp = max(rows, -(-C // rows) * rows)
-    if Wp != W or Cp != C:
-        words = jnp.pad(words, ((0, Cp - C), (0, Wp - W)))
-    lengths2d = jnp.asarray(lengths, jnp.uint32).reshape(C, 1)
-    if Cp != C:
-        lengths2d = jnp.pad(lengths2d, ((0, Cp - C), (0, 0)))
+    words, lengths2d, C, Cp, Wp = _pad_grid(words, lengths, tile, rows)
 
     grid = (Cp // rows, Wp // tile)
     out = pl.pallas_call(

@@ -22,12 +22,32 @@ runs the batched engine in `batch.py`.  Layout and contract:
     weighted sums and each row folds its own true byte length (ref.py),
     so a 2048-word chunk digests bit-identically whether it sits in a
     (1, 2048) per-leaf call or a (512, 2048) bucket row.
-  * Single-sync contract: a save issues one `pallas_call` per bucket and
-    fetches **all** (C, 4) digest rows with one `jax.device_get` at the
-    end — never one sync per leaf.  The write path mirrors it: dirty-pod
-    chunk payloads move in one batched `jax.device_get`
-    (`core.podding.batched_chunk_fetch`), so a full save costs 1 digest
-    fetch + ≤ 1 payload gather.
+  * Single-sync invariant: a save issues one `pallas_call` per bucket
+    and fetches digests, the on-device dirty bitmask, and speculated
+    payload rows with **one** `jax.device_get` total.  The fused bucket
+    kernel (`fingerprint.fingerprint_words_cmp`) compares each completed
+    digest against the device-resident previous table
+    (`batch.DeviceTable` — in the steady state the previous save's own
+    kernel output, zero table traffic) and emits a per-row dirty flag;
+    rows without a trusted previous digest are forced dirty on the host.
+  * Speculation semantics: chunks whose flip EMA exceeds the store's
+    ``spec_threshold`` (`core.volatility.FlipTracker.predicted`) —
+    expanded to pod granularity, plus the pods of changed scalars — have
+    their packed word rows compacted into the digest fetch.  Chunk
+    boundaries are 4-byte aligned and rows are little-endian bitcasts,
+    so a fetched row's first true-length bytes ARE the chunk payload.
+    A dirty chunk in the payload is a speculation *hit* (its bytes
+    already crossed the link); a dirty chunk outside it is a *miss* and
+    joins one corrective `batched_chunk_fetch` — so a warm sparse save
+    costs exactly 1 blocking sync, any save at most 2 (digest fetch +
+    ≤ 1 corrective gather), and manifests are bit-identical to the
+    two-sync path either way.
+  * Fallback ladder: ``fused=True`` (default) → on-device compare +
+    speculative payload, 1–2 syncs; ``fused=False`` → batched two-sync
+    path (digest fetch + payload gather, host compare); ``batched=False``
+    → the per-leaf oracle here (one sync per device leaf).  Host (numpy)
+    leaves always digest on the host (numpy twin, zero syncs) and are
+    dirty-resolved by the host compare at every rung.
   * Incremental host half (see `core.checkpoint`): the digest keys this
     engine emits are *chunk keys*, which the incremental pipeline relies
     on being stable — `GraphCache` keeps node ids and keys fixed for

@@ -70,6 +70,21 @@ def fingerprint_words_ref(words: jnp.ndarray, lengths: jnp.ndarray,
     return jnp.stack(out, axis=1)
 
 
+def fingerprint_words_cmp_ref(words: jnp.ndarray, lengths: jnp.ndarray,
+                              prev: jnp.ndarray, seed: int = 0):
+    """Oracle for the fused digest-and-compare pass
+    (`fingerprint.fingerprint_words_cmp`): digest as above, plus a uint32
+    dirty flag per row — 1 iff any digest lane differs from `prev`.
+
+    Rows without a trustworthy previous digest must be forced dirty by
+    the caller; the compare itself is sentinel-agnostic.
+    """
+    dig = fingerprint_words_ref(words, lengths, seed=seed)
+    dirty = jnp.any(dig != jnp.asarray(prev, jnp.uint32),
+                    axis=1).astype(jnp.uint32)
+    return dig, dirty
+
+
 def fingerprint_words_np(words: np.ndarray, lengths: np.ndarray,
                          seed: int = 0) -> np.ndarray:
     """Bit-identical numpy implementation (host-side state hashing)."""

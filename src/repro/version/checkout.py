@@ -10,6 +10,14 @@ storage.  Checkout therefore pays store reads only for the pods that
 actually differ (`StoreStats.read_bytes` scales with the branch delta,
 not the model size).
 
+On top of pod-level reuse sits **leaf-level reuse**: a leaf whose full
+chunk-digest column in the target manifest matches the live digest
+table is byte-identical to the live array, so checkout hands the live
+array object back directly (`CheckoutStats.n_leaves_reused`) — no chunk
+reassembly, no host copy, and jax leaves never leave the device.  Pods
+holding only such chunks are skipped entirely (their membership is
+derived from the live assignment, not by deserializing them).
+
 The second half is **post-checkout priming**, which is what keeps the
 *next* save incremental instead of a from-scratch fallback:
 
@@ -38,8 +46,8 @@ from typing import Any, Dict, Set, Tuple
 
 import numpy as np
 
-from ..core.change_detector import unpack_digest_table
-from ..core.graph import ALIAS, ObjectGraph, build_graph, path_str
+from ..core.change_detector import pack_digest_table, unpack_digest_table
+from ..core.graph import ALIAS, CHUNK, LEAF, ObjectGraph, build_graph, path_str
 from ..core.memo import GlobalMemoSpace
 from ..core.podding import (Pod, PodAssignment, Unpodder, batched_chunk_fetch,
                             open_manifest, serialize_pod)
@@ -50,7 +58,8 @@ class CheckoutStats:
     time_id: int
     n_pods: int = 0               # pods in the target manifest
     n_pods_fetched: int = 0       # read from the store (the delta)
-    n_pods_live: int = 0          # served from the in-memory state
+    n_pods_live: int = 0          # satisfied without a store read
+    n_leaves_reused: int = 0      # leaves handed back as live arrays
     read_bytes: int = 0           # store bytes actually read
     digest_table_imported: bool = False
     t_restore: float = 0.0
@@ -75,24 +84,68 @@ def _writable(tree: Any, memo: Dict[int, Any]) -> Any:
     return tree
 
 
+class _ReuseUnpodder(Unpodder):
+    """Unpodder that serves digest-matching leaves straight from the live
+    arrays (leaf-level checkout reuse).
+
+    Digest equality ⇒ byte equality, but chunk digests do not fold
+    shape/dtype — both are re-verified against the entry metadata before
+    an array is handed back; on mismatch the leaf falls through to the
+    normal chunk-reassembly path.  A reused leaf's chunk entries are
+    never visited, so pods holding only such chunks are never fetched.
+    """
+
+    def __init__(self, memo: GlobalMemoSpace, fetch_pod,
+                 reuse_arrays: Dict[str, Any], stats: CheckoutStats):
+        super().__init__(memo, fetch_pod)
+        self._reuse = reuse_arrays
+        self._stats = stats
+
+    def value(self, pod_id: int, local: int) -> Any:
+        key = (pod_id, local)
+        if key in self._values:
+            return self._values[key]
+        e = self.entry(pod_id, local)
+        if e["t"] == LEAF:
+            arr = self._reuse.get(e["k"])
+            if arr is not None:
+                meta = e["m"]
+                if (tuple(meta["shape"]) == tuple(arr.shape)
+                        and np.dtype(meta["dtype"]) == np.dtype(arr.dtype)):
+                    self._values[key] = arr
+                    self._stats.n_leaves_reused += 1
+                    return arr
+        return super().value(pod_id, local)
+
+
 def _assignment_from_pods(graph: ObjectGraph, up: Unpodder,
                           memo: GlobalMemoSpace,
-                          manifest: Dict[str, Any]) -> PodAssignment:
+                          manifest: Dict[str, Any],
+                          entry_keys=None) -> PodAssignment:
     """Rebuild the committed PodAssignment against the restored graph.
 
     Pod membership and memo locals come from the pod entries themselves
     (entry order *is* local-id order), pages from the manifest — so the
     reconstruction is exact: the next reuse-path save emits the same
     virtual refs, pages, and digests the commit recorded, bit-for-bit.
+
+    `entry_keys(pid) -> keys or None` supplies the key column of a pod
+    without deserializing it (checkout derives it from the live
+    assignment for digest-matching pods, since the key sequence is part
+    of the structural digest) — so pods fully covered by leaf reuse are
+    never fetched just to learn their membership.
     """
     pods: Dict[int, Pod] = {}
     node_pod: Dict[int, int] = {}
     node_local: Dict[int, int] = {}
     for pid_str in manifest["pods"]:
         pid = int(pid_str)
+        keys = entry_keys(pid) if entry_keys is not None else None
+        if keys is None:
+            keys = [e["k"] for e in up.entries(pid)]
         pod = Pod(pod_id=pid, depth=0)
-        for local, e in enumerate(up.entries(pid)):
-            nid = graph.by_key[e["k"]]
+        for local, k in enumerate(keys):
+            nid = graph.by_key[k]
             node_pod[nid] = pid
             node_local[nid] = local
             pod.node_ids.append(nid)
@@ -138,16 +191,46 @@ def delta_checkout(ck: Any, time_id: int) -> Tuple[Any, CheckoutStats]:
     live_pids = {pid: live_by_digest[d] for pid, d in digests.items()
                  if d in live_by_digest}
 
+    # Leaf-level reuse: a leaf whose full chunk-digest column in the
+    # target manifest matches the live digest table is byte-identical to
+    # the live array — hand the live array object back instead of
+    # reassembling bytes from pod chunks (no store read, no device
+    # gather, no host copy; jax leaves stay on device).
+    reuse_arrays: Dict[str, Any] = {}
+    packed_target = manifest.get("chunks")
+    if packed_target and live_graph is not None:
+        live_packed = pack_digest_table(ck.detector.export_table())
+        for lkey, blob in packed_target.items():
+            if live_packed.get(lkey) == blob and lkey in live_graph.arrays:
+                reuse_arrays[lkey] = live_graph.arrays[lkey]
+
     reads0 = store.stats.read_bytes
     t0 = _time.perf_counter()
 
-    # ONE batched gather for every chunk of every live-served pod (the
-    # save path's single-device-sync contract, kept on the restore path).
-    live_chunk_bytes = None
-    if live_pids:
-        nodes = [live_graph.node(nid) for lp in set(live_pids.values())
-                 for nid in live_asg.pods[lp].node_ids]
-        live_chunk_bytes, _ = batched_chunk_fetch(live_graph, nodes)
+    # ONE batched gather — built lazily, on the first live-served pod
+    # that is actually demanded — for every chunk of every *demandable*
+    # live pod (the save path's single-device-sync contract, kept on the
+    # restore path).  A live pod holding only chunks of reused leaves is
+    # never demanded, so a checkout fully covered by leaf reuse pays no
+    # device gather at all.
+    _live_fetch: Dict[str, Any] = {}
+
+    def live_chunk_bytes(node) -> bytes:
+        fn = _live_fetch.get("fn")
+        if fn is None:
+            demand = set()
+            for lp in set(live_pids.values()):
+                for nid in live_asg.pods[lp].node_ids:
+                    n = live_graph.node(nid)
+                    if not (n.kind == CHUNK
+                            and path_str(n.path) in reuse_arrays):
+                        demand.add(lp)
+                        break
+            nodes = [live_graph.node(nid) for lp in demand
+                     for nid in live_asg.pods[lp].node_ids]
+            fn, _ = batched_chunk_fetch(live_graph, nodes)
+            _live_fetch["fn"] = fn
+        return fn(node)
 
     def fetch(pod_id: int) -> bytes:
         live_pid = live_pids.get(pod_id)
@@ -156,12 +239,11 @@ def delta_checkout(ck: Any, time_id: int) -> Tuple[Any, CheckoutStats]:
             # live graph (digest == digest ⇒ bytes == bytes, the same
             # invariant content-addressed dedup already relies on).
             pod = live_asg.pods[live_pid]
-            stats.n_pods_live += 1
             return serialize_pod(pod, live_graph, live_asg, live_chunk_bytes)
         stats.n_pods_fetched += 1
         return store.get_pod(digests[pod_id])
 
-    up = Unpodder(memo, fetch)
+    up = _ReuseUnpodder(memo, fetch, reuse_arrays, stats)
     root_pod = manifest["root_pod"]
     root_entry = up.entry(root_pod, 0)
     restored: Dict[str, Any] = {}
@@ -185,8 +267,18 @@ def delta_checkout(ck: Any, time_id: int) -> Tuple[Any, CheckoutStats]:
         # pre-versioning manifest: one batched fingerprint pass over the
         # restored state rebuilds the table the manifest didn't carry.
         ck.detector.detect(graph, None)
-    ck._prev_pods = _assignment_from_pods(graph, up, memo, manifest)
+
+    def entry_keys(pid: int):
+        lp = live_pids.get(pid)
+        if lp is None:
+            return None
+        return [live_graph.node(nid).key
+                for nid in live_asg.pods[lp].node_ids]
+
+    ck._prev_pods = _assignment_from_pods(graph, up, memo, manifest,
+                                          entry_keys=entry_keys)
     ck._prev_graph = graph
     ck._pod_digests = {pid: bytes.fromhex(d) for pid, d in digests.items()}
+    stats.n_pods_live = stats.n_pods - stats.n_pods_fetched
     stats.t_prime = _time.perf_counter() - t0
     return state, stats
