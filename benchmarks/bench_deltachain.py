@@ -1,0 +1,220 @@
+"""Delta-chain pod storage benchmark: store bytes with chunk-granular
+delta pods vs whole-pod snapshots on a branchy fine-tune history.
+
+    PYTHONPATH=src python -m benchmarks.bench_deltachain [--quick]
+
+Workload: a short "pre-training" trajectory on main, then K fine-tune
+branches forked from the tip, each applying sparse row mutations under a
+``BundleAll`` podding policy (one multi-chunk pod per save, so a
+few-dirty-chunk save is exactly the case the delta cost model admits).
+The SAME seeded op sequence runs twice — ``delta_chains`` on and off —
+and the two stores are diffed:
+
+  * **storage**: resident store bytes and cumulative pod bytes written,
+    on vs off; ``store_bytes_reduction_x`` is the headline multiple
+    (acceptance floor: >= 3x).  Delta counts, fallback whole-pod count
+    at the depth cap, and the deepest observed chain (must stay <=
+    ``max_chain_depth``) ride along.
+  * **fidelity**: every branch tip loaded from the delta store is
+    compared bit-for-bit against the whole-pod store — the oracle
+    contract from the test suite, re-checked on the bench workload.
+  * **checkout**: cold readers over each store hop across branch tips —
+    wall time, bytes read, and chain reads walked on the delta side.
+  * **gc**: all but one branch deleted on the delta store, then
+    mark-and-sweep with dry-run == actual bytes, mid-chain rescues
+    counted, and the survivor re-verified against the whole-pod oracle.
+
+Rows land in ``experiments/bench/BENCH_deltachain.json`` for per-PR
+diffing; CI runs the --quick config as a smoke check.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "bench", "BENCH_deltachain.json")
+
+#: (rows, d, base_saves, n_branches, branch_saves, dirty_rows, chunk_bytes,
+#:  max_chain_depth)
+FULL_CFG = (8192, 64, 4, 3, 6, 8, 1 << 12, 8)
+QUICK_CFG = (2048, 32, 2, 2, 4, 4, 1 << 12, 8)
+
+
+def _mk_ck(cfg, delta_chains: bool):
+    from repro.core import BundleAll, Chipmink, DeltaPolicy, MemoryStore
+    kw = dict(chunk_bytes=cfg[6], policy=BundleAll())
+    if delta_chains:
+        kw.update(delta_chains=True,
+                  delta_policy=DeltaPolicy(max_chain_depth=cfg[7]))
+    return Chipmink(MemoryStore(), **kw)
+
+
+def _build(cfg, delta_chains: bool) -> Tuple[object, Dict[str, int]]:
+    """Branchy fine-tune history; identical states on- and off-delta
+    because the rng is consumed by the same call sequence."""
+    rows, d, base_saves, n_branches, branch_saves, dirty, _, _ = cfg
+    ck = _mk_ck(cfg, delta_chains)
+    rng = np.random.default_rng(0)
+    emb = rng.standard_normal((rows, d)).astype(np.float32)
+    state = {"params": {"emb": emb}, "opt": {"mu": np.zeros_like(emb)},
+             "step": 0}
+    for i in range(base_saves):
+        if i:
+            idx = rng.integers(0, rows, size=dirty)
+            state["params"]["emb"][idx] += 1e-2
+        state["step"] = i
+        ck.save(state)
+
+    tips: Dict[str, int] = {}
+    for b in range(n_branches):
+        name = f"ft-{b}"
+        ck.checkout("main")
+        ck.branch(name)
+        s = ck.checkout(name)
+        for i in range(branch_saves):
+            idx = rng.integers(0, rows, size=dirty)
+            s["params"]["emb"][idx] += 1e-2 * (b + 1)
+            s["step"] = 100 * (b + 1) + i
+            tips[name] = ck.save(s)
+    return ck, tips
+
+
+def _cold_reader(ck, cfg):
+    """A fresh checkpointer over the SAME memory store contents, so
+    read-side stats start from zero."""
+    from repro.core import BundleAll, Chipmink, MemoryStore
+    cold = Chipmink(MemoryStore(), chunk_bytes=cfg[6], policy=BundleAll())
+    cold.store._pods = ck.store._pods
+    cold.store._delta_pods = ck.store._delta_pods
+    cold.store._manifests = ck.store._manifests
+    cold.store._meta = ck.store._meta
+    return cold
+
+
+def _tree_eq(a, b) -> bool:
+    if isinstance(a, dict):
+        return (isinstance(b, dict) and a.keys() == b.keys()
+                and all(_tree_eq(a[k], b[k]) for k in a))
+    aa, bb = np.asarray(a), np.asarray(b)
+    return (aa.dtype == bb.dtype and aa.shape == bb.shape
+            and bool(np.array_equal(aa, bb)))
+
+
+def bench_deltachain(quick: bool = False) -> List[Dict]:
+    cfg = QUICK_CFG if quick else FULL_CFG
+    rows_out: List[Dict] = []
+
+    ck_on, tips = _build(cfg, delta_chains=True)
+    ck_off, tips_off = _build(cfg, delta_chains=False)
+    assert tips == tips_off
+    names = sorted(tips)
+
+    # -- storage: the headline multiple ---------------------------------
+    bytes_on = ck_on.store.total_bytes()
+    bytes_off = ck_off.store.total_bytes()
+    depths = [ck_on.store.pod_chain_depth(d)
+              for d in ck_on.store.list_pods()]
+    identical = all(
+        _tree_eq(ck_on.load(time_id=t), ck_off.load(time_id=t))
+        for t in tips.values())
+    rows_out.append({
+        "bench": "deltachain", "workload": "branchy_finetune",
+        "n_saves": cfg[2] + cfg[3] * cfg[4],
+        "store_bytes_delta_on": bytes_on,
+        "store_bytes_delta_off": bytes_off,
+        "store_bytes_reduction_x": round(bytes_off / max(bytes_on, 1), 2),
+        "pod_bytes_written_on": ck_on.store.stats.pod_bytes_written,
+        "pod_bytes_written_off": ck_off.store.stats.pod_bytes_written,
+        "n_delta_pods": ck_on.store.stats.delta_pods_written,
+        "n_whole_pods": len(ck_on.store.list_pods())
+        - len(ck_on.store.list_delta_pods()),
+        "chain_depth_max": max(depths),
+        "max_chain_depth_cfg": cfg[7],
+        "depth_cap_respected": bool(max(depths) <= cfg[7]),
+        "tips_bit_identical_to_whole_pod_oracle": bool(identical),
+    })
+
+    # -- checkout: cold tip hops, delta chains vs whole pods ------------
+    # the tip AND its predecessor: a tip can be a depth-cap whole-pod
+    # fallback, while the commit before it is always mid-chain
+    hop_tids = [t for name in names for t in (tips[name], tips[name] - 1)]
+
+    def _hop(ck):
+        cold = _cold_reader(ck, cfg)
+        ms: List[float] = []
+        rd: List[int] = []
+        for tid in hop_tids * 2:
+            t0 = time.perf_counter()
+            r0 = cold.store.stats.read_bytes
+            cold.checkout(tid)
+            ms.append((time.perf_counter() - t0) * 1e3)
+            rd.append(cold.store.stats.read_bytes - r0)
+        return ms, rd, cold.store.stats.chain_reads
+
+    on_ms, on_rd, on_chain = _hop(ck_on)
+    off_ms, off_rd, off_chain = _hop(ck_off)
+    med = lambda xs: float(np.median(xs))
+    rows_out.append({
+        "bench": "deltachain", "workload": "checkout",
+        "checkout_ms_p50_on": round(med(on_ms), 3),
+        "checkout_ms_p50_off": round(med(off_ms), 3),
+        "read_bytes_p50_on": int(med(on_rd)),
+        "read_bytes_p50_off": int(med(off_rd)),
+        "chain_reads_on": on_chain,
+        "chain_reads_off": off_chain,
+    })
+
+    # -- gc: sweep the dead branches, rescue mid-chain survivors --------
+    keep = names[0]
+    ck_on.checkout(keep)
+    for name in names[1:]:
+        ck_on.versions.delete_branch(name)
+    total_before = ck_on.store.total_bytes()
+    dry = ck_on.gc(dry_run=True)
+    real = ck_on.gc()
+    survivor_ok = _tree_eq(ck_on.load(time_id=tips[keep]),
+                           ck_off.load(time_id=tips[keep]))
+    rows_out.append({
+        "bench": "deltachain", "workload": "gc",
+        "n_branches_deleted": len(names) - 1,
+        "commits_swept": real.n_commits_deleted,
+        "pods_rematerialized": real.n_pods_rematerialized,
+        "dry_run_matches_actual": bool(
+            dry.bytes_reclaimed == real.bytes_reclaimed
+            and dry.n_pods_rematerialized == real.n_pods_rematerialized),
+        "reclaimed_bytes": real.bytes_reclaimed,
+        "reclaim_ratio": round(real.bytes_reclaimed / max(total_before, 1),
+                               4),
+        "survivor_bit_identical": bool(survivor_ok),
+    })
+
+    os.makedirs(os.path.dirname(OUT_JSON), exist_ok=True)
+    payload = {
+        "config": {"rows": cfg[0], "d": cfg[1], "base_saves": cfg[2],
+                   "n_branches": cfg[3], "branch_saves": cfg[4],
+                   "dirty_rows": cfg[5], "chunk_bytes": cfg[6],
+                   "max_chain_depth": cfg[7], "quick": quick},
+        "summary": rows_out,
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return rows_out
+
+
+def main() -> None:
+    import argparse
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="small config for CI smoke runs")
+    args = p.parse_args()
+    for row in bench_deltachain(quick=args.quick):
+        print(",".join(f"{k}={v}" for k, v in row.items()))
+
+
+if __name__ == "__main__":
+    main()

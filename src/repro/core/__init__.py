@@ -12,12 +12,17 @@ Public API:
                         policy for the crash-consistency story
     LeaseManager, LeaseHeartbeat — multi-writer leases, fencing tokens,
                         save intents (Chipmink(multi_writer=True))
+    DeltaPolicy       — delta-chain pod storage cost model
+                        (Chipmink(delta_chains=True))
 """
 from .async_saver import AsyncSaveError, AsyncSaver
 from .checkpoint import Chipmink, TimeID, reflow
+from .delta import (DeltaPolicy, apply_pod_delta, encode_pod_delta,
+                    parse_delta)
 from .faults import (Fault, FaultyStore, InjectedCrash, LEASE_OPS,
                      LeaseFaultInjector, RetryPolicy, call_with_retries,
-                     crash_matrix_points, lease_matrix_points)
+                     crash_matrix_points, delta_matrix_points,
+                     lease_matrix_points)
 from .lease import (LEASES_META_KEY, Lease, LeaseHeartbeat, LeaseHeld,
                     LeaseLost, LeaseManager, default_owner)
 from .graph import ObjectGraph, build_graph, chunk_grid, rebuild_tree

@@ -56,6 +56,30 @@ Ablation switches (`enable_cd`, `enable_avf`, `async_mode`) exist to
 reproduce the paper's §8.8/§8.9 baselines (NoCD/AVF, OnlyCD, OnlyAVF,
 Sync); `incremental=False` restores the from-scratch host path.
 
+Delta-chain pod storage (``delta_chains=True``)
+-----------------------------------------------
+When a reuse-path save re-serializes a pod that the detector mask shows
+changed in only a few chunks (or scalars), the pod can be stored as a
+chunk-granular binary delta against its parent-commit pod instead of
+whole (`core/delta.py`).  The patch set comes for free: under
+assignment reuse with no structural change, only CHUNK entries in
+``report.dirty`` and SCALAR entries in ``scalar_changed_keys`` can
+differ from the parent blob, so those entry indices ARE the delta.  A
+per-pod cost model (`DeltaPolicy`) admits the delta only when its bytes
+plus an expected chain-reconstruction charge beat the whole blob, and
+never past ``max_chain_depth`` links from a whole base.  A pod stored
+as a delta records its base in the manifest as
+``pods[pid]["delta_of"] = <parent digest hex>``; the digest still names
+the *full* content, and `BaseStore.get_pod` reconstructs it
+transparently (chain walk + patch replay), so checkouts are
+bit-identical to the whole-pod oracle (``delta_chains=False``).  GC
+re-materializes live delta descendants before sweeping their base, and
+fsck validates/repairs chains (see the storage contract in
+`core/store.py`).  Per-save stats: ``n_delta_pods``,
+``t_delta_encode``, ``chain_depth_max``.  Default off: the from-scratch
+oracle never reuses assignments, so parity-tested manifests stay free
+of storage-form fields unless explicitly opted in.
+
 Versioning contract (repro.version)
 -----------------------------------
 Every save is a *commit*: its manifest records the parent TimeID (by
@@ -172,6 +196,7 @@ import numpy as np
 from .active_filter import ActiveVariableFilter
 from .async_saver import AsyncSaver
 from .change_detector import ChangeDetector, pack_digest_table
+from .delta import DeltaPolicy, encode_pod_delta
 from .faults import RetryPolicy, call_with_retries
 from .graph import CHUNK, ObjectGraph, build_graph, rebuild_tree
 from .graph_cache import GraphCache, IncrementalBuildInfo
@@ -218,6 +243,8 @@ class Chipmink:
         lease_heartbeat: bool = True,
         max_refs_cas_retries: Optional[int] = None,
         refs_cas_backoff: Optional[RetryPolicy] = None,
+        delta_chains: bool = False,
+        delta_policy: Optional[DeltaPolicy] = None,
     ) -> None:
         self.store = store if store is not None else MemoryStore()
         self.policy = policy if policy is not None else LGA()
@@ -241,6 +268,9 @@ class Chipmink:
         self._prev_pods: Optional[PodAssignment] = None
         self._prev_graph: Optional[ObjectGraph] = None
         self._pod_digests: Dict[int, bytes] = {}   # prev save's pod digests
+        self.delta_chains = delta_chains
+        self.delta_policy = (delta_policy if delta_policy is not None
+                             else DeltaPolicy())
         self.retry_policy = (retry_policy if retry_policy is not None
                              else RetryPolicy())
         # Multi-writer mode: lease manager + lazily-acquired writer lease
@@ -573,8 +603,11 @@ class Chipmink:
         pods_meta: Dict[int, Dict[str, Any]] = {}
         written = aliased = digests_reused = 0
         bytes_before = self.store.total_bytes()
+        #: the parent commit's digest per pod id — the delta base each
+        #: touched pod would chain to (captured before new_digests lands).
+        prev_pod_digests = self._pod_digests
         new_digests: Dict[int, bytes] = {}
-        to_write: List[tuple] = []        # (pod, dig_hex or None, digest)
+        to_write: List[tuple] = []        # (pid, pod, dig_hex, digest)
         aliased_entries: List[tuple] = []  # same shape; dedup-skipped pods
         for pid, pod in asg.pods.items():
             if touched_pods is not None and pid not in touched_pods \
@@ -603,10 +636,10 @@ class Chipmink:
                                         person=b"nocd")
                     h.update(time_id.to_bytes(8, "little"))
                     dig_hex = h.hexdigest()
-                to_write.append((pod, dig_hex, digest))
+                to_write.append((pid, pod, dig_hex, digest))
             else:
                 aliased += 1
-                aliased_entries.append((pod, dig_hex, digest))
+                aliased_entries.append((pid, pod, dig_hex, digest))
             pods_meta[pid] = {
                 "d": dig_hex,
                 "pages": (asg.memo.pods[pid].pages
@@ -636,9 +669,9 @@ class Chipmink:
                 time_ids=tuple(t for t in (time_id, parent)
                                if t is not None),
                 digests=sorted({m["d"] for m in pods_meta.values()}))
-            for pod, dig_hex, digest in aliased_entries:
+            for pid, pod, dig_hex, digest in aliased_entries:
                 if not self.store.has_pod(dig_hex):
-                    to_write.append((pod, dig_hex, digest))
+                    to_write.append((pid, pod, dig_hex, digest))
                     with self.saver.l_ns:
                         self.thesaurus.prune([dig_hex])
                     aliased -= 1
@@ -652,7 +685,7 @@ class Chipmink:
         # batched device fetch for every chunk of every dirty pod (clean
         # pods never touch the device either way).
         t0 = _time.perf_counter()
-        gather_nodes = [graph.node(nid) for pod, _, _ in to_write
+        gather_nodes = [graph.node(nid) for _, pod, _, _ in to_write
                         for nid in pod.node_ids]
         if self.fused:
             chunk_bytes_of, gather_syncs = fused_chunk_fetch(
@@ -674,13 +707,50 @@ class Chipmink:
         # applies.  InjectedCrash (BaseException) punches through.
         t0 = _time.perf_counter()
         n_retries = 0
-        for pod, dig_hex, digest in to_write:
+        # delta-chain eligibility for this save: only the reuse path has a
+        # per-pod parent digest AND the soundness proof (assignment reuse +
+        # detector mask) that non-patched entries are byte-identical.
+        delta_eligible = (self.delta_chains and self.enable_cd
+                          and pods_reused and touched_pods is not None)
+        scalar_changed = set(ginfo.scalar_changed_keys) if ginfo else set()
+        n_delta_pods = 0
+        chain_depth_max = 0
+        t_delta = 0.0
+        for pid, pod, dig_hex, digest in to_write:
             data = serialize_pod(pod, graph, asg, chunk_bytes_of)
 
-            def put_one(dig_hex=dig_hex, data=data, digest=digest) -> bool:
+            delta_blob = base_hex = None
+            delta_depth = 0
+            base = prev_pod_digests.get(pid) if delta_eligible else None
+            if base is not None and base != digest:
+                td0 = _time.perf_counter()
+                cand_hex = base.hex()
+                try:
+                    # depth the new pod would sit at if chained to base;
+                    # a missing/broken/cyclic base chain disqualifies.
+                    depth = self.store.pod_chain_depth(cand_hex) + 1
+                except (FileNotFoundError, ValueError):
+                    depth = None
+                if depth is not None and depth <= self.delta_policy.max_chain_depth:
+                    changed_locals = [
+                        i for i, nid in enumerate(pod.node_ids)
+                        if ((n := graph.node(nid)).kind == CHUNK
+                            and n.key in report.dirty)
+                        or n.key in scalar_changed]
+                    cand = encode_pod_delta(data, cand_hex, changed_locals)
+                    if self.delta_policy.admit(len(cand), len(data), depth):
+                        delta_blob, base_hex, delta_depth = cand, cand_hex, depth
+                t_delta += _time.perf_counter() - td0
+
+            def put_one(dig_hex=dig_hex, data=data, digest=digest,
+                        delta_blob=delta_blob) -> bool:
                 with self.saver.l_ns:
                     if self.enable_cd:
-                        fresh = self.store.put_pod(dig_hex, data)
+                        if delta_blob is not None:
+                            fresh = self.store.put_pod_delta(dig_hex,
+                                                             delta_blob)
+                        else:
+                            fresh = self.store.put_pod(dig_hex, data)
                         self.thesaurus.insert(digest, dig_hex)
                         return fresh
                     self.store.put_pod(dig_hex, data)
@@ -690,12 +760,22 @@ class Chipmink:
             n_retries += nr
             if fresh:
                 written += 1
+                if delta_blob is not None:
+                    # the manifest records chain structure only for pods
+                    # this commit actually stored in delta form (a dedup
+                    # hit keeps whatever form the digest already has).
+                    pods_meta[pid]["delta_of"] = base_hex
+                    n_delta_pods += 1
+                    chain_depth_max = max(chain_depth_max, delta_depth)
             else:
                 aliased += 1              # disk-level synonym
         stats["t_write"] = _time.perf_counter() - t0
         stats["n_retries"] = n_retries
         stats["pods_written"] = written
         stats["pods_aliased"] = aliased
+        stats["n_delta_pods"] = n_delta_pods
+        stats["t_delta_encode"] = t_delta
+        stats["chain_depth_max"] = chain_depth_max
         stats["bytes_written"] = self.store.total_bytes() - bytes_before
 
         manifest = {

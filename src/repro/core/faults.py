@@ -56,8 +56,12 @@ class InjectedCrash(BaseException):
 #: while letting the lease matrix kill lease traffic specifically —
 #: renewal-loss is ``transient`` here, an expiry race is ``latency``
 #: here plus a short TTL.
+#: ``put_pod_delta`` is the delta-form publish of a chain-stored pod;
+#: ``rematerialize`` is `rematerialize_pod` — GC's mid-chain-sweep
+#: rescue write (torn flavor: the whole form lands truncated while the
+#: delta form survives, rematerialize_pod's own crash window).
 WRITE_POINTS = ("put_pod", "put_manifest", "put_meta", "cas_meta",
-                "cas_lease")
+                "cas_lease", "put_pod_delta", "rematerialize")
 #: read-path points (transient/latency only; reads have no torn mode —
 #: they never mutate the store).  ``get_lease`` is `get_meta` on the
 #: lease blob, split from ``get_meta`` for the same reason as above.
@@ -97,6 +101,20 @@ def crash_matrix_points() -> List[Tuple[str, str]]:
     (step ran, process died before the next one)."""
     out: List[Tuple[str, str]] = []
     for point in ("put_pod", "put_manifest", "cas_meta"):
+        out.append((point, "crash-before"))
+        out.append((point, "torn"))
+        out.append((point, "crash-after"))
+    return out
+
+
+def delta_matrix_points() -> List[Tuple[str, str]]:
+    """Every (point, flavor) a DELTA-CHAIN save transaction can die at,
+    in protocol order: the delta publish itself, any whole-pod sibling
+    write, and the manifest/refs commit steps.  The ``rematerialize``
+    point (GC's mid-chain-sweep rescue) is armed separately — it fires
+    inside `gc()`, not inside a save."""
+    out: List[Tuple[str, str]] = []
+    for point in ("put_pod_delta", "put_pod", "put_manifest", "cas_meta"):
         out.append((point, "crash-before"))
         out.append((point, "torn"))
         out.append((point, "crash-after"))
@@ -253,6 +271,67 @@ class FaultyStore(BaseStore):
 
     def delete_pod(self, digest_hex: str) -> int:
         return self.inner.delete_pod(digest_hex)
+
+    # -- delta-chain pods ----------------------------------------------------
+    def put_pod_delta(self, digest_hex: str, delta_blob: bytes) -> bool:
+        f = self._fire("put_pod_delta")
+        if f is None:
+            return self.inner.put_pod_delta(digest_hex, delta_blob)
+        if f.mode == "transient":
+            raise f.exc(
+                f"injected transient error: put_pod_delta {digest_hex}")
+        if f.mode == "torn":
+            # truncated delta bytes land at the final address (non-atomic
+            # backend), then the process dies: fsck must catch a delta
+            # blob that parses nowhere.
+            self.inner._put_delta_raw(digest_hex,
+                                      self._torn(delta_blob,
+                                                 f.torn_fraction))
+            raise InjectedCrash(f"torn put_pod_delta {digest_hex}")
+        if f.when == "after":
+            self.inner.put_pod_delta(digest_hex, delta_blob)
+        raise InjectedCrash(
+            f"crash at put_pod_delta[{f.when}] {digest_hex}")
+
+    def rematerialize_pod(self, digest_hex: str) -> int:
+        f = self._fire("rematerialize")
+        if f is None:
+            return self.inner.rematerialize_pod(digest_hex)
+        if f.mode == "transient":
+            raise f.exc(
+                f"injected transient error: rematerialize {digest_hex}")
+        if f.mode == "torn":
+            # the rescue's whole form lands truncated while the delta
+            # form survives — rematerialize_pod's crash window on a
+            # non-atomic backend.  fsck heals this by dropping the torn
+            # whole form (the chain still serves the bytes).
+            data = self.inner.get_pod(digest_hex)
+            blob = self.inner._encode_blob(data)
+            self.inner._put_raw(digest_hex,
+                                self._torn(blob, f.torn_fraction))
+            raise InjectedCrash(f"torn rematerialize {digest_hex}")
+        if f.when == "after":
+            self.inner.rematerialize_pod(digest_hex)
+        raise InjectedCrash(
+            f"crash at rematerialize[{f.when}] {digest_hex}")
+
+    def pod_base(self, digest_hex: str):
+        return self.inner.pod_base(digest_hex)
+
+    def pod_chain(self, digest_hex: str) -> List[str]:
+        return self.inner.pod_chain(digest_hex)
+
+    def pod_chain_depth(self, digest_hex: str) -> int:
+        return self.inner.pod_chain_depth(digest_hex)
+
+    def pod_whole_nbytes(self, digest_hex: str) -> int:
+        return self.inner.pod_whole_nbytes(digest_hex)
+
+    def list_delta_pods(self) -> List[str]:
+        return self.inner.list_delta_pods()
+
+    def drop_whole_form(self, digest_hex: str) -> bool:
+        return self.inner.drop_whole_form(digest_hex)
 
     # -- manifests ----------------------------------------------------------
     def put_manifest(self, time_id: int, manifest: Dict[str, Any]) -> None:

@@ -27,6 +27,42 @@ version/fsck.py for the full commit protocol: pods → manifest → refs).
 and the containing directory entry are fsynced before the rename is
 considered landed (slower; for stores that must survive power loss, not
 just process death).
+
+Delta-chain pod storage
+-----------------------
+A pod digest may be backed by one of two *physical forms*: a **whole**
+blob (the canonical `serialize_pod` bytes, possibly compressed) or a
+**delta** blob (`core/delta.py`: patched entries against a parent pod's
+digest).  The digest always names the *full* content — `get_pod`
+resolves the form transparently, walking the delta chain back to a
+whole base and replaying patches, so every reader above the store sees
+bit-identical bytes either way (digest equality ⇒ byte equality is
+preserved; that invariant is what dedup, the thesaurus, and delta-aware
+checkout already rely on).  The contract:
+
+  * `put_pod_delta(digest, delta_blob)` stores the delta form; dedups
+    against *either* existing form.  The caller guarantees the delta's
+    base digest is present in the store and that applying the delta to
+    the base reproduces exactly the bytes `digest` names (the save path
+    derives the patch set from the detector's dirty mask, which proves
+    every unpatched entry byte-identical).  The commit's manifest
+    records the link as ``pods[pid]["delta_of"] = base_digest`` so
+    readers of the manifest alone can see chain structure.
+  * Chain depth is bounded by the writer's `DeltaPolicy.max_chain_depth`
+    (enforced at encode time via `pod_chain_depth`); the store itself
+    only enforces the hard `MAX_WALK` cycle guard.
+  * If *both* forms exist, the whole form wins (reads, `pod_nbytes`,
+    `pod_base`).  That state is the legal crash window of
+    `rematerialize_pod`, which writes the whole form FIRST and only
+    then deletes the delta form — a crash between the two leaves a
+    readable pod plus redundant delta debris that fsck clears.
+  * GC ordering: before sweeping a dead base, every live descendant is
+    re-materialized (whole form written from the still-complete chain);
+    only then are dead pods deleted (version/gc.py).  Dry-run reports
+    reclaim net of the re-materialization bytes it *would* write.
+  * `delete_pod` removes both forms and frees their summed bytes;
+    `list_pods` enumerates the union; `pod_nbytes` is the physical
+    stored size of the winning form.
 """
 from __future__ import annotations
 
@@ -37,6 +73,8 @@ import zlib
 from typing import Any, Dict, Iterable, List, Optional
 
 import msgpack
+
+from .delta import MAX_WALK, apply_pod_delta, parse_delta
 
 try:
     import zstandard as zstd
@@ -69,6 +107,11 @@ class StoreStats:
         self.meta_cas_conflicts = 0
         # stale CAS lockfiles broken (dead-pid / aged-out; file backend)
         self.meta_locks_broken = 0
+        # delta-chain pod storage
+        self.delta_pods_written = 0   # pods stored as deltas
+        self.delta_bytes_written = 0  # stored bytes of those deltas
+        self.chain_reads = 0          # get_pod calls that walked a chain
+        self.pods_rematerialized = 0  # delta pods rewritten whole (GC/fsck)
 
     def as_dict(self) -> Dict[str, Any]:
         return dict(self.__dict__)
@@ -80,9 +123,37 @@ class BaseStore:
     def __init__(self) -> None:
         self.stats = StoreStats()
         self._lock = threading.Lock()
+        #: delta digest -> base digest, lazily filled on chain walks and
+        #: invalidated when the delta form is deleted/re-materialized.
+        self._chain_cache: Dict[str, str] = {}
 
-    # -- pods -------------------------------------------------------------
-    def has_pod(self, digest_hex: str) -> bool:
+    # -- blob framing (shared by whole and delta forms) --------------------
+    def _encode_blob(self, data: bytes) -> bytes:
+        if not self.compress:
+            return data
+        if zstd is not None:
+            self.stats.codec = "zstd"
+            return _CODEC_ZSTD + zstd.ZstdCompressor(level=3).compress(data)
+        self.stats.codec = "zlib"
+        return _CODEC_ZLIB + zlib.compress(data, 6)
+
+    def _decode_blob(self, blob: bytes) -> bytes:
+        if not self.compress:
+            return blob
+        tag, body = blob[:1], blob[1:]
+        if tag == _CODEC_ZSTD:
+            if zstd is None:
+                raise RuntimeError(
+                    "pod compressed with zstd but zstandard missing")
+            return zstd.ZstdDecompressor().decompress(body)
+        if tag == _CODEC_ZLIB:
+            return zlib.decompress(body)
+        raise ValueError(
+            f"blob has unknown codec tag {blob[:1]!r} — corrupted blob "
+            "or store written without codec tagging")
+
+    # -- raw physical forms (backends) ------------------------------------
+    def _has_whole(self, digest_hex: str) -> bool:
         raise NotImplementedError
 
     def _put_raw(self, digest_hex: str, data: bytes) -> None:
@@ -91,12 +162,48 @@ class BaseStore:
     def _get_raw(self, digest_hex: str) -> bytes:
         raise NotImplementedError
 
+    def _delete_raw(self, digest_hex: str) -> None:
+        raise NotImplementedError
+
+    def _whole_nbytes(self, digest_hex: str) -> int:
+        raise NotImplementedError
+
+    def _list_whole(self) -> List[str]:
+        raise NotImplementedError
+
+    def _has_delta(self, digest_hex: str) -> bool:
+        raise NotImplementedError
+
+    def _put_delta_raw(self, digest_hex: str, data: bytes) -> None:
+        raise NotImplementedError
+
+    def _get_delta_raw(self, digest_hex: str) -> bytes:
+        raise NotImplementedError
+
+    def _delete_delta_raw(self, digest_hex: str) -> None:
+        raise NotImplementedError
+
+    def _delta_nbytes(self, digest_hex: str) -> int:
+        raise NotImplementedError
+
+    # -- pods -------------------------------------------------------------
+    def has_pod(self, digest_hex: str) -> bool:
+        """True if the digest is readable — stored in either physical
+        form (whole blob or delta link)."""
+        return self._has_whole(digest_hex) or self._has_delta(digest_hex)
+
     def list_pods(self) -> List[str]:
-        """Enumerate the digest of every pod currently in the store."""
+        """Enumerate the digest of every pod currently in the store
+        (union of whole and delta forms)."""
+        return sorted(set(self._list_whole()) | set(self.list_delta_pods()))
+
+    def list_delta_pods(self) -> List[str]:
+        """Digests currently stored in delta form."""
         raise NotImplementedError
 
     def pod_nbytes(self, digest_hex: str) -> int:
-        """Stored (possibly compressed) size of one pod.
+        """Stored (possibly compressed) *physical* size of one pod — the
+        whole form if present, else the delta form.
 
         Raises `FileNotFoundError` when the pod is absent: a pod can
         legitimately be empty (0 bytes means a torn write — serialized
@@ -104,63 +211,205 @@ class BaseStore:
         used to rely on 0-on-missing masked torn stores; fsck reports
         missing and empty pods separately (version/fsck.py).
         """
-        raise NotImplementedError
-
-    def _delete_raw(self, digest_hex: str) -> None:
-        raise NotImplementedError
+        if self._has_whole(digest_hex):
+            return self._whole_nbytes(digest_hex)
+        return self._delta_nbytes(digest_hex)
 
     def delete_pod(self, digest_hex: str) -> int:
-        """Remove a pod; returns the number of stored bytes freed (0 if the
-        pod was absent).  Used by mark-and-sweep GC — callers must only
-        delete digests unreachable from every ref (see version/gc.py for
-        the crash-safe ordering: manifests are deleted before pods)."""
+        """Remove a pod (both physical forms); returns the number of
+        stored bytes freed (0 if the pod was absent).  Used by
+        mark-and-sweep GC — callers must only delete digests unreachable
+        from every ref, and must re-materialize live delta descendants
+        of a doomed base first (see version/gc.py for the crash-safe
+        ordering: re-materialize, then manifests, then pods)."""
         with self._lock:
-            if not self.has_pod(digest_hex):
+            n = 0
+            if self._has_whole(digest_hex):
+                n += self._whole_nbytes(digest_hex)
+                self._delete_raw(digest_hex)
+            if self._has_delta(digest_hex):
+                n += self._delta_nbytes(digest_hex)
+                self._delete_delta_raw(digest_hex)
+            self._chain_cache.pop(digest_hex, None)
+            if n == 0:
                 return 0
-            n = self.pod_nbytes(digest_hex)
-            self._delete_raw(digest_hex)
             self.stats.pods_deleted += 1
             self.stats.pod_bytes_deleted += n
             return n
 
     def put_pod(self, digest_hex: str, data: bytes) -> bool:
-        """Write pod bytes unless already present.  Returns True if written."""
+        """Write pod bytes (whole form) unless the digest is already
+        present in either form.  Returns True if written."""
         with self._lock:
             if self.has_pod(digest_hex):
                 self.stats.pods_deduped += 1
                 return False
-            blob = data
-            if self.compress:
-                if zstd is not None:
-                    blob = _CODEC_ZSTD + \
-                        zstd.ZstdCompressor(level=3).compress(data)
-                    self.stats.codec = "zstd"
-                else:
-                    blob = _CODEC_ZLIB + zlib.compress(data, 6)
-                    self.stats.codec = "zlib"
+            blob = self._encode_blob(data)
             self._put_raw(digest_hex, blob)
             self.stats.pods_written += 1
             self.stats.pod_bytes_written += len(blob)
             return True
 
+    def put_pod_delta(self, digest_hex: str, delta_blob: bytes) -> bool:
+        """Store `digest_hex` in delta form (a `core/delta.py` blob whose
+        base must already be present).  Dedups against either existing
+        form.  Returns True if written.
+
+        The caller owns the correctness contract: applying the delta
+        chain must reproduce exactly the bytes `digest_hex` names, and
+        chain depth must respect its `DeltaPolicy` (the store enforces
+        only the hard `MAX_WALK` cycle guard on reads)."""
+        with self._lock:
+            if self.has_pod(digest_hex):
+                self.stats.pods_deduped += 1
+                return False
+            blob = self._encode_blob(delta_blob)
+            self._put_delta_raw(digest_hex, blob)
+            self.stats.pods_written += 1
+            self.stats.pod_bytes_written += len(blob)
+            self.stats.delta_pods_written += 1
+            self.stats.delta_bytes_written += len(blob)
+            return True
+
+    def _resolve_full_locked(self, digest_hex: str):
+        """Resolve a digest to its full pod bytes, walking the delta
+        chain if needed.  Caller holds `self._lock` (the lock is
+        non-reentrant, so the walk never re-enters public methods).
+        Returns (data, bytes_read, chain_depth)."""
+        payloads = []
+        nread = 0
+        d = digest_hex
+        for _ in range(MAX_WALK):
+            if self._has_whole(d):
+                blob = self._get_raw(d)
+                nread += len(blob)
+                data = self._decode_blob(blob)
+                for payload in reversed(payloads):
+                    data = apply_pod_delta(payload, data)
+                return data, nread, len(payloads)
+            if not self._has_delta(d):
+                if d == digest_hex:
+                    raise FileNotFoundError(f"pod {d} not in store")
+                raise FileNotFoundError(
+                    f"pod {d} not in store (broken delta chain from "
+                    f"{digest_hex})")
+            raw = self._get_delta_raw(d)
+            nread += len(raw)
+            base, payload = parse_delta(self._decode_blob(raw))
+            self._chain_cache[d] = base
+            payloads.append(payload)
+            d = base
+        raise ValueError(
+            f"delta chain from {digest_hex} exceeds MAX_WALK={MAX_WALK} "
+            "links — cycle or pathological store")
+
     def get_pod(self, digest_hex: str) -> bytes:
         with self._lock:
-            blob = self._get_raw(digest_hex)
+            data, nread, depth = self._resolve_full_locked(digest_hex)
             self.stats.reads += 1
-            self.stats.read_bytes += len(blob)
-        if self.compress:
-            tag, body = blob[:1], blob[1:]
-            if tag == _CODEC_ZSTD:
-                if zstd is None:
-                    raise RuntimeError(
-                        "pod compressed with zstd but zstandard missing")
-                return zstd.ZstdDecompressor().decompress(body)
-            if tag == _CODEC_ZLIB:
-                return zlib.decompress(body)
+            self.stats.read_bytes += nread
+            if depth:
+                self.stats.chain_reads += 1
+        return data
+
+    # -- delta-chain metadata ---------------------------------------------
+    def _pod_base_locked(self, digest_hex: str) -> Optional[str]:
+        if self._has_whole(digest_hex) or not self._has_delta(digest_hex):
+            return None
+        base = self._chain_cache.get(digest_hex)
+        if base is None:
+            blob = self._decode_blob(self._get_delta_raw(digest_hex))
+            base, _ = parse_delta(blob)
+            self._chain_cache[digest_hex] = base
+        return base
+
+    def pod_base(self, digest_hex: str) -> Optional[str]:
+        """The base digest this pod's stored delta patches, or None when
+        the pod is stored whole / absent (whole form wins when both
+        physical forms exist)."""
+        with self._lock:
+            return self._pod_base_locked(digest_hex)
+
+    def pod_chain(self, digest_hex: str) -> List[str]:
+        """Digests from `digest_hex` back to (and including) its
+        whole-stored base; ``[digest_hex]`` for a pod stored whole.
+        Raises FileNotFoundError on a missing link (broken chain) and
+        ValueError past the `MAX_WALK` cycle guard."""
+        with self._lock:
+            out: List[str] = []
+            d = digest_hex
+            for _ in range(MAX_WALK):
+                out.append(d)
+                if self._has_whole(d):
+                    return out
+                if not self._has_delta(d):
+                    raise FileNotFoundError(
+                        f"pod {d} not in store (delta chain from "
+                        f"{digest_hex})")
+                d = self._pod_base_locked(d)
             raise ValueError(
-                f"pod {digest_hex} has unknown codec tag {blob[:1]!r} — "
-                "corrupted blob or store written without codec tagging")
-        return blob
+                f"delta chain from {digest_hex} exceeds MAX_WALK="
+                f"{MAX_WALK} links — cycle or pathological store")
+
+    def pod_chain_depth(self, digest_hex: str) -> int:
+        """Number of delta links between `digest_hex` and its whole base
+        (0 for a pod stored whole)."""
+        return len(self.pod_chain(digest_hex)) - 1
+
+    def pod_whole_nbytes(self, digest_hex: str) -> int:
+        """Stored size this pod WOULD occupy as a whole blob — the
+        actual size if already whole, else the encoded size of the
+        chain-resolved bytes.  GC dry-run uses this so its
+        re-materialization estimate equals the real sweep's writes."""
+        with self._lock:
+            if self._has_whole(digest_hex):
+                return self._whole_nbytes(digest_hex)
+            data, _, _ = self._resolve_full_locked(digest_hex)
+        return len(self._encode_blob(data))
+
+    def drop_whole_form(self, digest_hex: str) -> bool:
+        """Remove a pod's whole form when a delta form also exists —
+        fsck's repair for a torn re-materialization, where a truncated
+        whole blob shadows a still-valid delta chain.  Returns True if
+        dropped.  Refuses (False) when only one form exists: deleting
+        the sole copy is `delete_pod`'s job, never a repair."""
+        with self._lock:
+            if not (self._has_whole(digest_hex)
+                    and self._has_delta(digest_hex)):
+                return False
+            n = self._whole_nbytes(digest_hex)
+            self._delete_raw(digest_hex)
+            self.stats.pod_bytes_deleted += n
+            return True
+
+    def rematerialize_pod(self, digest_hex: str) -> int:
+        """Rewrite a delta-stored pod as a whole blob; returns the bytes
+        written (0 if the pod was already whole).
+
+        Crash-safe ordering: the whole form is written FIRST, then the
+        delta form is deleted — a crash between the two leaves both
+        forms, and reads prefer the whole form; fsck clears the
+        redundant delta.  Byte accounting flows through
+        `pod_bytes_written`/`pod_bytes_deleted` so `total_bytes()`
+        reflects the swap."""
+        with self._lock:
+            if self._has_whole(digest_hex):
+                if self._has_delta(digest_hex):
+                    nd = self._delta_nbytes(digest_hex)
+                    self._delete_delta_raw(digest_hex)
+                    self._chain_cache.pop(digest_hex, None)
+                    self.stats.pod_bytes_deleted += nd
+                return 0
+            data, _, _ = self._resolve_full_locked(digest_hex)
+            blob = self._encode_blob(data)
+            self._put_raw(digest_hex, blob)
+            self.stats.pod_bytes_written += len(blob)
+            nd = self._delta_nbytes(digest_hex)
+            self._delete_delta_raw(digest_hex)
+            self._chain_cache.pop(digest_hex, None)
+            self.stats.pod_bytes_deleted += nd
+            self.stats.pods_rematerialized += 1
+            return len(blob)
 
     # -- manifests ----------------------------------------------------------
     def _put_manifest_raw(self, time_id: int, blob: bytes) -> None:
@@ -242,11 +491,12 @@ class MemoryStore(BaseStore):
         super().__init__()
         self.compress = compress
         self._pods: Dict[str, bytes] = {}
+        self._delta_pods: Dict[str, bytes] = {}
         self._manifests: Dict[int, bytes] = {}
         self._meta: Dict[str, bytes] = {}
         self._meta_lock = threading.Lock()
 
-    def has_pod(self, digest_hex: str) -> bool:
+    def _has_whole(self, digest_hex: str) -> bool:
         return digest_hex in self._pods
 
     def _put_raw(self, digest_hex: str, data: bytes) -> None:
@@ -255,10 +505,10 @@ class MemoryStore(BaseStore):
     def _get_raw(self, digest_hex: str) -> bytes:
         return self._pods[digest_hex]
 
-    def list_pods(self) -> List[str]:
+    def _list_whole(self) -> List[str]:
         return sorted(self._pods)
 
-    def pod_nbytes(self, digest_hex: str) -> int:
+    def _whole_nbytes(self, digest_hex: str) -> int:
         blob = self._pods.get(digest_hex)
         if blob is None:
             raise FileNotFoundError(f"pod {digest_hex} not in store")
@@ -266,6 +516,27 @@ class MemoryStore(BaseStore):
 
     def _delete_raw(self, digest_hex: str) -> None:
         del self._pods[digest_hex]
+
+    def _has_delta(self, digest_hex: str) -> bool:
+        return digest_hex in self._delta_pods
+
+    def _put_delta_raw(self, digest_hex: str, data: bytes) -> None:
+        self._delta_pods[digest_hex] = data
+
+    def _get_delta_raw(self, digest_hex: str) -> bytes:
+        return self._delta_pods[digest_hex]
+
+    def _delete_delta_raw(self, digest_hex: str) -> None:
+        del self._delta_pods[digest_hex]
+
+    def _delta_nbytes(self, digest_hex: str) -> int:
+        blob = self._delta_pods.get(digest_hex)
+        if blob is None:
+            raise FileNotFoundError(f"pod {digest_hex} not in store")
+        return len(blob)
+
+    def list_delta_pods(self) -> List[str]:
+        return sorted(self._delta_pods)
 
     def _put_manifest_raw(self, time_id: int, blob: bytes) -> None:
         self._manifests[time_id] = blob
@@ -365,7 +636,14 @@ class FileStore(BaseStore):
         d = os.path.join(self.root, "pods", digest_hex[:2])
         return os.path.join(d, digest_hex + ".pod")
 
-    def has_pod(self, digest_hex: str) -> bool:
+    def _delta_path(self, digest_hex: str) -> str:
+        # delta form lives beside the whole form in the same shard dir;
+        # ".dpod" does not match the "*.pod" suffix test, so each listing
+        # sees only its own physical form.
+        d = os.path.join(self.root, "pods", digest_hex[:2])
+        return os.path.join(d, digest_hex + ".dpod")
+
+    def _has_whole(self, digest_hex: str) -> bool:
         return os.path.exists(self._pod_path(digest_hex))
 
     def _put_raw(self, digest_hex: str, data: bytes) -> None:
@@ -377,7 +655,7 @@ class FileStore(BaseStore):
         with open(self._pod_path(digest_hex), "rb") as f:
             return f.read()
 
-    def list_pods(self) -> List[str]:
+    def _list_suffix(self, suffix: str) -> List[str]:
         out: List[str] = []
         pods_dir = os.path.join(self.root, "pods")
         for shard in sorted(os.listdir(pods_dir)):
@@ -385,11 +663,14 @@ class FileStore(BaseStore):
             if not os.path.isdir(sd):
                 continue
             for fn in sorted(os.listdir(sd)):
-                if fn.endswith(".pod"):
-                    out.append(fn[:-4])
+                if fn.endswith(suffix):
+                    out.append(fn[:-len(suffix)])
         return out
 
-    def pod_nbytes(self, digest_hex: str) -> int:
+    def _list_whole(self) -> List[str]:
+        return self._list_suffix(".pod")
+
+    def _whole_nbytes(self, digest_hex: str) -> int:
         return os.path.getsize(self._pod_path(digest_hex))
 
     def _delete_raw(self, digest_hex: str) -> None:
@@ -399,6 +680,27 @@ class FileStore(BaseStore):
         # left behind deliberately: removing them could race a concurrent
         # _put_raw's makedirs.
         os.remove(self._pod_path(digest_hex))
+
+    def _has_delta(self, digest_hex: str) -> bool:
+        return os.path.exists(self._delta_path(digest_hex))
+
+    def _put_delta_raw(self, digest_hex: str, data: bytes) -> None:
+        path = self._delta_path(digest_hex)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        self._write_atomic(path, data)
+
+    def _get_delta_raw(self, digest_hex: str) -> bytes:
+        with open(self._delta_path(digest_hex), "rb") as f:
+            return f.read()
+
+    def _delete_delta_raw(self, digest_hex: str) -> None:
+        os.remove(self._delta_path(digest_hex))
+
+    def _delta_nbytes(self, digest_hex: str) -> int:
+        return os.path.getsize(self._delta_path(digest_hex))
+
+    def list_delta_pods(self) -> List[str]:
+        return self._list_suffix(".dpod")
 
     def _manifest_path(self, time_id: int) -> str:
         return os.path.join(self.root, "manifests", f"{time_id:08d}.mp")

@@ -18,6 +18,14 @@ reassembly, no host copy, and jax leaves never leave the device.  Pods
 holding only such chunks are skipped entirely (their membership is
 derived from the live assignment, not by deserializing them).
 
+Pods stored in **delta form** (`delta_chains=True` saves) need no
+special handling here: `store.get_pod` walks the chain and replays the
+patches, returning the same full bytes the digest names — so the
+unpodder, pod-level reuse, and leaf-level reuse all compose with delta
+chains unchanged (`CheckoutStats.n_chain_reads` counts fetches that
+paid a walk).  Live digest-matching pods are still served from memory
+without touching the store at all, chain or no chain.
+
 The second half is **post-checkout priming**, which is what keeps the
 *next* save incremental instead of a from-scratch fallback:
 
@@ -60,7 +68,8 @@ class CheckoutStats:
     n_pods_fetched: int = 0       # read from the store (the delta)
     n_pods_live: int = 0          # satisfied without a store read
     n_leaves_reused: int = 0      # leaves handed back as live arrays
-    read_bytes: int = 0           # store bytes actually read
+    n_chain_reads: int = 0        # fetched pods resolved via a delta chain
+    read_bytes: int = 0           # store bytes actually read (all links)
     digest_table_imported: bool = False
     t_restore: float = 0.0
     t_prime: float = 0.0
@@ -205,6 +214,7 @@ def delta_checkout(ck: Any, time_id: int) -> Tuple[Any, CheckoutStats]:
                 reuse_arrays[lkey] = live_graph.arrays[lkey]
 
     reads0 = store.stats.read_bytes
+    chain0 = store.stats.chain_reads
     t0 = _time.perf_counter()
 
     # ONE batched gather — built lazily, on the first live-served pod
@@ -253,6 +263,9 @@ def delta_checkout(ck: Any, time_id: int) -> Tuple[Any, CheckoutStats]:
     state = _writable(restored, {})
     stats.t_restore = _time.perf_counter() - t0
     stats.read_bytes = store.stats.read_bytes - reads0
+    # delta-stored pods resolve transparently inside store.get_pod (chain
+    # walk + patch replay); surface how many fetches paid that walk.
+    stats.n_chain_reads = store.stats.chain_reads - chain0
 
     # ---- post-checkout priming: make the next save() incremental -------
     t0 = _time.perf_counter()

@@ -45,11 +45,27 @@ A crash can therefore leave, in decreasing order of likelihood:
   * repairs the file backend's legacy ``HEAD`` pointer.
 
 Quick mode (default) checks existence and non-emptiness of every
-referenced pod — O(store metadata), run on every `Chipmink` open.  Deep
-mode (``deep=True``) additionally reads every pod in the store and
-verifies it deserializes, which is the only way to catch a torn pod
-whose truncated bytes are non-empty; run it after an unclean shutdown on
-a backend without atomic renames, or whenever paranoia is cheap.
+referenced pod — O(store metadata), run on every `Chipmink` open.  For
+a pod stored in **delta form** the quick scan also walks its chain: a
+missing or empty link makes the pod unreadable, so it classifies as
+missing/empty even though its own blob looks fine.  Deep mode
+(``deep=True``) additionally reads every pod in the store and verifies
+it deserializes — for a delta pod that means the full chain walk and
+patch replay, the only way to catch a torn delta whose truncated bytes
+are non-empty; run it after an unclean shutdown on a backend without
+atomic renames, or whenever paranoia is cheap.
+
+Delta-specific repairs: a **torn re-materialization** (corrupt whole
+blob shadowing a still-valid delta form — the legal crash window of
+`store.rematerialize_pod`) is healed by dropping the whole form
+(``whole_forms_dropped``), after which the chain serves the bytes and
+any commit the corruption had condemned is re-classified complete.  A
+chain that is genuinely broken (base missing, torn link with no other
+form) makes its referencing commits incomplete → the standard refs
+rollback to the newest complete ancestor applies, and the dead chain
+is swept like any other bad pod.  The orphan sweep follows chains too:
+a base only reachable as some referenced delta pod's ancestor is
+load-bearing, not debris.
 
 fsck's exclusivity contract is now lease-shaped: refs repair was always
 CAS-protected, and with live-lease awareness plus the stale-only lock
@@ -98,6 +114,9 @@ class FsckReport:
     refs_deleted: List[str] = dataclasses.field(default_factory=list)
     refs_rebuilt: bool = False
     legacy_head_repaired: bool = False
+    #: torn re-materializations healed: corrupt whole blobs dropped in
+    #: favor of the pod's still-valid delta chain
+    whole_forms_dropped: List[str] = dataclasses.field(default_factory=list)
     n_tmp_removed: int = 0
     n_manifests_swept: int = 0
     n_pods_swept: int = 0
@@ -118,6 +137,7 @@ class FsckReport:
         return not (self.incomplete or self.empty_pods or self.corrupt_pods
                     or self.refs_rolled_back or self.refs_deleted
                     or self.refs_rebuilt or self.legacy_head_repaired
+                    or self.whole_forms_dropped
                     or self.n_tmp_removed or self.n_manifests_swept
                     or self.n_pods_swept or self.leases_reaped
                     or self.gc_phase_reset)
@@ -142,14 +162,24 @@ def _pod_state(store: BaseStore, digest_hex: str, deep: bool,
         elif store.pod_nbytes(digest_hex) == 0:
             state = "empty"
         elif deep:
+            # chain-resolving read: for a delta pod this walks every
+            # link and replays the patches — the full validation.
             obj = msgpack.unpackb(store.get_pod(digest_hex), raw=False)
             if not isinstance(obj, dict) or "e" not in obj:
                 state = "corrupt"
+        else:
+            # quick mode: a delta pod is only readable if its whole
+            # chain exists with non-empty links; pod_chain parses the
+            # delta headers (no payload reads) and raises on a break.
+            for link in store.pod_chain(digest_hex):
+                if store.pod_nbytes(link) == 0:
+                    state = "empty"
+                    break
     except FileNotFoundError:
         state = "missing"
     except Exception:
-        # failed decompression, codec tag garbage, msgpack truncation —
-        # all the faces a torn pod wears.
+        # failed decompression, codec tag garbage, msgpack truncation,
+        # a cyclic chain — all the faces a torn pod wears.
         state = "corrupt"
     cache[digest_hex] = state
     return state
@@ -257,8 +287,44 @@ def fsck(store: BaseStore, *, repair: bool = True, deep: bool = False,
     if not repair:
         return rep
 
-    # ---- 3. repair refs via CAS ----------------------------------------
+    # ---- 2b. heal torn re-materializations ------------------------------
+    # A corrupt pod that ALSO has a delta form is rematerialize_pod's
+    # crash window: the half-written whole blob shadows a chain that can
+    # still serve the bytes.  Drop the whole form, re-verify the pod via
+    # the chain, and re-classify any commit the corruption condemned.
     t0 = _time.perf_counter()
+    for d in list(rep.corrupt_pods):
+        if not store.drop_whole_form(d):
+            continue
+        try:
+            obj = msgpack.unpackb(store.get_pod(d), raw=False)
+            ok = isinstance(obj, dict) and "e" in obj
+        except Exception:
+            ok = False
+        if ok:
+            pod_cache[d] = "ok"
+            rep.corrupt_pods.remove(d)
+            rep.whole_forms_dropped.append(d)
+        # not ok: the delta form is torn too — the pod stays corrupt and
+        # both forms go in the sweep below.
+    if rep.whole_forms_dropped:
+        for tid in sorted(rep.incomplete):
+            try:
+                m = store.get_manifest(tid)
+                digs = {meta["d"] for meta in m.get("pods", {}).values()}
+            except Exception:
+                continue                      # torn manifest: still dead
+            if all(pod_cache.get(d) == "ok"
+                   or _pod_state(store, d, deep, pod_cache) == "ok"
+                   for d in digs):
+                del rep.incomplete[tid]
+                rep.missing_pods.pop(tid, None)
+                complete[tid] = digs
+                parents[tid] = m.get("parent")
+        complete_tids = set(complete)
+        rep.n_commits_complete = len(complete)
+
+    # ---- 3. repair refs via CAS ----------------------------------------
     for _ in range(MAX_REPAIR_RETRIES):
         refs_blob = store.get_meta(REFS_META_KEY)
         branches: Dict[str, int] = {}
@@ -365,6 +431,14 @@ def fsck(store: BaseStore, *, repair: bool = True, deep: bool = False,
     bad_pods = set(rep.empty_pods) | set(rep.corrupt_pods)
     if sweep_orphans:
         referenced = set().union(*complete.values()) if complete else set()
+        # chain closure: a delta pod's bases are load-bearing even when
+        # no complete manifest names them directly — a base reachable
+        # only as an ancestor link must survive the orphan sweep.
+        for d in list(referenced):
+            try:
+                referenced.update(store.pod_chain(d))
+            except (FileNotFoundError, ValueError):
+                pass
         bad_pods |= {d for d in store.list_pods() if d not in referenced}
     bad_pods -= live_digests      # pinned by a live peer's save intent
     for d in sorted(bad_pods):

@@ -35,6 +35,14 @@ realizes that over refs:
     only after the refs CAS, so there is no in-between.  Without a
     manager the PR-6 behavior is unchanged: safe against ref movement,
     single-writer assumed for the final window.
+  * **re-materialize** — a live pod stored in delta form whose chain
+    crosses a doomed base would become unreadable after the sweep, so
+    before anything is deleted every such descendant is rewritten whole
+    (`store.rematerialize_pod`: whole form first, then the delta form
+    dropped — crash-safe at every point, see core/store.py).  The
+    ordering re-materialize → manifests → pods is load-bearing: a crash
+    mid-remat leaves all chains intact (nothing deleted yet), and a
+    crash mid-sweep can only strand already-whole pods.
   * **sweep** — every manifest of a dead commit and every pod digest
     outside the mark set (and outside the pinned sets) is deleted.
     Order matters for crash safety on the file backend: manifests are
@@ -47,7 +55,11 @@ realizes that over refs:
 `dry_run=True` performs the full mark and measures the sweep without
 deleting; its byte estimate is computed from the same per-object sizes
 the real sweep frees, so estimate == actual by construction (an object
-that vanished since the mark counts 0 in both).
+that vanished since the mark counts 0 in both).  Re-materialization is
+estimated the same way: the dry run computes the identical rescue set
+and charges `pod_whole_nbytes` (the exact size the real remat writes)
+against the delta bytes it frees, so `bytes_reclaimed` — reclaim *net*
+of re-materialization — matches the real sweep exactly.
 
 The caller must quiesce in-flight saves first (a pending manifest is
 invisible to the mark phase until it lands); `Chipmink.gc` drains its
@@ -83,11 +95,18 @@ class GCStats:
     n_commits_pinned: int = 0
     n_pods_pinned: int = 0
     gc_fence: Optional[int] = None
+    # delta-chain rescue: live descendants of a swept base rewritten whole
+    n_pods_rematerialized: int = 0
+    remat_bytes_written: int = 0   # whole blobs written by the rescue
+    remat_bytes_freed: int = 0     # delta blobs the rescue replaced
     deleted_pod_digests: List[str] = dataclasses.field(default_factory=list)
 
     @property
     def bytes_reclaimed(self) -> int:
-        return self.pod_bytes_reclaimed + self.manifest_bytes_reclaimed
+        """Net reclaim: deleted bytes minus the re-materialization cost
+        (whole blobs written in place of freed delta blobs)."""
+        return (self.pod_bytes_reclaimed + self.manifest_bytes_reclaimed
+                + self.remat_bytes_freed - self.remat_bytes_written)
 
     def as_dict(self) -> Dict[str, Any]:
         d = {k: v for k, v in self.__dict__.items()
@@ -170,6 +189,15 @@ def mark_and_sweep(store: BaseStore, dag: CommitDAG, *,
                 stats.pod_bytes_reclaimed = sum(
                     _nbytes_or_zero(store.pod_nbytes, d)
                     for d in dead_pods)
+                # same rescue set the real sweep would re-materialize;
+                # pod_whole_nbytes is the exact size the real remat
+                # writes, so the net estimate equals the actual reclaim.
+                for d in _chain_rescues(store, dead_pods):
+                    stats.n_pods_rematerialized += 1
+                    stats.remat_bytes_freed += _nbytes_or_zero(
+                        store.pod_nbytes, d)
+                    stats.remat_bytes_written += _nbytes_or_zero(
+                        store.pod_whole_nbytes, d)
                 return stats
 
             if _after_mark is not None:
@@ -211,6 +239,14 @@ def mark_and_sweep(store: BaseStore, dag: CommitDAG, *,
         stats.n_pods_deleted = len(dead_pods)
         stats.deleted_pod_digests = dead_pods
 
+        # re-materialize BEFORE any deletion: live delta descendants of a
+        # doomed base are rewritten whole while every chain link still
+        # exists (crash anywhere in this loop leaves all data readable).
+        for d in _chain_rescues(store, dead_pods):
+            stats.remat_bytes_freed += _nbytes_or_zero(store.pod_nbytes, d)
+            stats.remat_bytes_written += store.rematerialize_pod(d)
+            stats.n_pods_rematerialized += 1
+
         # sweep: manifests first (crash-safe ordering — module docstring)
         for tid in dead_tids:
             stats.manifest_bytes_reclaimed += store.delete_manifest(tid)
@@ -234,6 +270,25 @@ def mark_and_sweep(store: BaseStore, dag: CommitDAG, *,
                 # and a peer reaps the stuck phase — never mask the
                 # original error with cleanup noise.
                 pass
+
+
+def _chain_rescues(store: BaseStore, dead_pods: List[str]) -> List[str]:
+    """Live delta-stored pods whose chain crosses a doomed base — the
+    set the sweep must re-materialize to stay readable.  An already
+    broken or cyclic chain is skipped (nothing to resolve from; that is
+    fsck damage, not GC work)."""
+    dead = set(dead_pods)
+    out: List[str] = []
+    for d in store.list_delta_pods():
+        if d in dead:
+            continue
+        try:
+            chain = store.pod_chain(d)
+        except (FileNotFoundError, ValueError):
+            continue
+        if any(link in dead for link in chain[1:]):
+            out.append(d)
+    return out
 
 
 def _unpin(stats: GCStats, dead_tids: List[int], dead_pods: List[str],

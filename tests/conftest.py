@@ -4,3 +4,23 @@ import sys
 # make proptest (the hypothesis stand-in) importable under
 # `PYTHONPATH=src pytest tests/`
 sys.path.insert(0, os.path.dirname(__file__))
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--proptest-seed", action="store", default=None, type=int,
+        help="base seed for proptest @given cases and VersionWorkload "
+             "runs; failing cases name the seed to replay with. "
+             "Defaults to the `proptest_seed` ini (pytest.ini).")
+    parser.addini(
+        "proptest_seed", "default base seed for proptest randomized tests",
+        default="0")
+
+
+def pytest_configure(config):
+    import proptest
+
+    seed = config.getoption("--proptest-seed")
+    if seed is None:
+        seed = int(config.getini("proptest_seed"))
+    proptest.BASE_SEED = int(seed)

@@ -1,18 +1,48 @@
-"""Minimal property-testing shim (hypothesis is unavailable offline).
+"""Reusable randomized-workload harness + property-testing shim
+(hypothesis is unavailable offline).
 
-Provides `@given(...)` running the test body over `N_CASES` seeded random
-cases with shrink-free failure reporting.  Strategies are callables
-(rng) -> value; combinators mirror the hypothesis API we need.
+Two layers:
+
+* a `@given(...)` decorator running the test body over `N_CASES` seeded
+  random cases with shrink-free failure reporting.  Strategies are
+  callables (rng) -> value; combinators mirror the hypothesis API we
+  need.  Case seeds derive from ``(BASE_SEED, test name, case index)``;
+  `BASE_SEED` is wired to pytest's ``--proptest-seed`` option /
+  ``proptest_seed`` ini (tests/conftest.py), and every failure message
+  names the seed so a CI failure replays locally with
+  ``--proptest-seed=<n>``.
+
+* a shared randomized version-workload: `base_state` / `mutate_state` /
+  `tree_equal` / `strip_manifest` / `snapshot_state`, and the
+  `VersionWorkload` driver — seedable mutate/commit/branch/checkout/
+  gc/crash rounds over a subject `Chipmink`, verified in lockstep
+  against a from-scratch whole-pod oracle (``incremental=False,
+  delta_chains=False``): stripped manifests, per-digest pod bytes, and
+  loaded trees must all be bit-identical at every step.
 """
 from __future__ import annotations
 
-import functools
 import os
-from typing import Any, Callable, Dict
+import zlib
+from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
 N_CASES = int(os.environ.get("PROPTEST_CASES", "25"))
+
+#: Base seed for every @given case and for harness-driven tests.
+#: tests/conftest.py overwrites this from ``--proptest-seed`` (or the
+#: ``proptest_seed`` ini) before collection; assertion messages name it
+#: so any failure is replayable.
+BASE_SEED = 0
+
+
+def case_rng(name: str, case: int) -> np.random.Generator:
+    """The rng for one named case: deterministic in (BASE_SEED, name,
+    case) and nothing else — `hash(str)` is process-salted, so the test
+    name enters via crc32 instead."""
+    return np.random.default_rng(
+        (BASE_SEED & 0xFFFFFFFF, zlib.crc32(name.encode()), case))
 
 
 class Strategy:
@@ -69,16 +99,359 @@ def given(**strategies: Strategy):
         # wrapped signature and treat drawn parameters as fixtures
         def wrapper(*args, **kw):
             for case in range(N_CASES):
-                rng = np.random.default_rng((hash(fn.__name__) & 0xFFFF, case))
+                rng = case_rng(fn.__name__, case)
                 drawn = {k: s(rng) for k, s in strategies.items()}
                 try:
                     fn(*args, **drawn, **kw)
                 except Exception as e:
                     raise AssertionError(
-                        f"property failed on case {case} with "
+                        f"property {fn.__name__} failed on case "
+                        f"{case}/{N_CASES} at proptest seed {BASE_SEED} "
+                        f"(replay: --proptest-seed={BASE_SEED}) with "
                         f"{ {k: repr(v)[:80] for k, v in drawn.items()} }"
                     ) from e
         wrapper.__name__ = fn.__name__
         wrapper.__doc__ = fn.__doc__
         return wrapper
     return deco
+
+
+# ---------------------------------------------------------------------------
+# shared randomized version-workload
+# ---------------------------------------------------------------------------
+
+def base_state(rng: np.random.Generator, rows: int = 512) -> Dict[str, Any]:
+    """The canonical test state tree: a chunked embedding, a small dense
+    leaf, a nested group, an optimizer slot, a host scalar, and a shared
+    reference (``tied`` aliases ``emb``)."""
+    state = {
+        "params": {"emb": rng.standard_normal((rows, 16)).astype(np.float32),
+                   "w": rng.standard_normal((32, 32)).astype(np.float32),
+                   "nested": {"a": rng.standard_normal(64).astype(np.float32)}},
+        "opt": {"mu": np.zeros((rows, 16), np.float32)},
+        "step": 0,
+    }
+    state["params"]["tied"] = state["params"]["emb"]
+    return state
+
+
+def mutate_state(state: Dict[str, Any], rng: np.random.Generator,
+                 round_no: int) -> str:
+    """One randomized mutate step; returns a tag for failure reporting.
+    Mixes sparse in-place value writes (the delta-friendly case), scalar
+    updates, and structural edits (add/remove/reshape/alias changes)."""
+    choice = int(rng.integers(0, 7))
+    if choice == 0:
+        return "none"
+    if choice == 1:                      # in-place value mutation
+        idx = rng.integers(0, state["params"]["emb"].shape[0], size=4)
+        state["params"]["emb"][idx] += 1e-2
+        state["opt"]["mu"][idx] = 0.5
+        return "values"
+    if choice == 2:                      # host scalar change
+        state["step"] = round_no
+        return "scalar"
+    if choice == 3:                      # structural: add a leaf
+        state["params"][f"x{round_no}"] = rng.standard_normal(
+            (16, 4)).astype(np.float32)
+        return "add-leaf"
+    if choice == 4:                      # structural: remove an added leaf
+        for k in list(state["params"]):
+            if k.startswith("x"):
+                del state["params"][k]
+                return "del-leaf"
+        return "del-noop"
+    if choice == 5:                      # structural: reshape a leaf
+        r = 24 + round_no
+        state["params"]["w"] = rng.standard_normal((r, 32)).astype(np.float32)
+        return "reshape"
+    # structural: break / restore the shared reference
+    if state["params"]["tied"] is state["params"]["emb"]:
+        state["params"]["tied"] = state["params"]["emb"].copy()
+        return "untie"
+    state["params"]["tied"] = state["params"]["emb"]
+    return "retie"
+
+
+def sparse_mutate_state(state: Dict[str, Any], rng: np.random.Generator,
+                        round_no: int) -> str:
+    """A non-structural, delta-chain-friendly mutate step: a few in-place
+    rows plus the step scalar.  Keeps pod assignments (and therefore
+    delta eligibility) stable across rounds."""
+    idx = rng.integers(0, state["params"]["emb"].shape[0], size=2)
+    state["params"]["emb"][idx] += np.float32(0.25)
+    state["step"] = round_no
+    return "sparse"
+
+
+def tree_equal(a: Any, b: Any) -> bool:
+    """Bit-exact tree equality: same dict keys, same dtypes/shapes, same
+    bytes for array leaves, `==` for the rest."""
+    if isinstance(a, dict) or isinstance(b, dict):
+        return (isinstance(a, dict) and isinstance(b, dict)
+                and a.keys() == b.keys()
+                and all(tree_equal(a[k], b[k]) for k in a))
+    if hasattr(a, "shape") or hasattr(b, "shape"):
+        return (np.asarray(a).dtype == np.asarray(b).dtype
+                and np.array_equal(np.asarray(a), np.asarray(b)))
+    return a == b
+
+
+def snapshot_state(tree: Any) -> Any:
+    """Deep value copy of a state tree (aliases are not preserved — the
+    snapshot is for value comparison, not identity)."""
+    if isinstance(tree, dict):
+        return {k: snapshot_state(v) for k, v in tree.items()}
+    if hasattr(tree, "shape"):
+        return np.array(tree)
+    if isinstance(tree, bytearray):
+        return bytearray(tree)
+    return tree
+
+
+def strip_manifest(manifest: Dict[str, Any],
+                   drop=("stats",)) -> Dict[str, Any]:
+    """Manifest minus fields legitimately differing between instances.
+    ``delta_of`` pod annotations are always dropped: the physical form a
+    pod landed in is a storage choice, not part of commit identity."""
+    out = {k: v for k, v in manifest.items() if k not in drop}
+    if "pods" in out:
+        out["pods"] = {
+            pid: {k: v for k, v in meta.items() if k != "delta_of"}
+            for pid, meta in out["pods"].items()}
+    return out
+
+
+class VersionWorkload:
+    """Seedable randomized workload over a subject `Chipmink`, verified
+    in lockstep against a from-scratch whole-pod oracle.
+
+    The subject runs the configuration under test (incremental pipeline,
+    optionally ``delta_chains=True``, optionally behind a `FaultyStore`);
+    the oracle re-pods every committed state from scratch with
+    ``incremental=False, delta_chains=False``.  Every commit is checked
+    three ways: stripped manifests equal, every pod digest's bytes
+    bit-identical (`get_pod` resolves delta chains on the subject), and
+    the loaded tree equal to a deep snapshot taken at commit time.
+
+    ``policy`` is a zero-arg factory (e.g. ``BundleAll``): it is called
+    once for the subject and once for the oracle so a stateful podding
+    policy is never shared between instances.
+    """
+
+    def __init__(self, rng: np.random.Generator, *, rows: int = 256,
+                 chunk_bytes: int = 1 << 10, delta_chains: bool = False,
+                 delta_policy=None, policy: Optional[Callable[[], Any]] = None,
+                 store=None, faulty: bool = False,
+                 mutate: Optional[Callable] = None):
+        from repro.core import Chipmink, FaultyStore, MemoryStore
+
+        self.rng = rng
+        self.chunk_bytes = chunk_bytes
+        self.delta_chains = delta_chains
+        self.delta_policy = delta_policy
+        self.policy = policy
+        self.mutate_fn = mutate if mutate is not None else mutate_state
+        self.inner_store = store if store is not None else MemoryStore()
+        self.fstore = FaultyStore(self.inner_store) if faulty else None
+        self.subject = self._open_subject(fsck_on_open=False)
+        self.oracle = Chipmink(MemoryStore(), chunk_bytes=chunk_bytes,
+                               incremental=False, use_kernel=False,
+                               fsck_on_open=False,
+                               policy=policy() if policy else None)
+        self.state = base_state(rng, rows=rows)
+        #: subject tid -> {"oracle_tid": int, "state": deep snapshot}
+        self.commits: Dict[int, Dict[str, Any]] = {}
+        self.round_no = 0
+        self._branch_counter = 0
+
+    def _open_subject(self, fsck_on_open):
+        from repro.core import Chipmink
+        store = self.fstore if self.fstore is not None else self.inner_store
+        kw = dict(chunk_bytes=self.chunk_bytes, use_kernel=False,
+                  fsck_on_open=fsck_on_open,
+                  delta_chains=self.delta_chains)
+        if self.delta_policy is not None:
+            kw["delta_policy"] = self.delta_policy
+        if self.policy is not None:
+            kw["policy"] = self.policy()
+        return Chipmink(store, **kw)
+
+    # -- context for assertion messages -------------------------------------
+    def _ctx(self, tag: str) -> str:
+        return (f"round {self.round_no} ({tag}) at proptest seed "
+                f"{BASE_SEED} (replay: --proptest-seed={BASE_SEED})")
+
+    # -- workload steps ------------------------------------------------------
+    def mutate(self) -> str:
+        self.round_no += 1
+        return self.mutate_fn(self.state, self.rng, self.round_no)
+
+    def commit(self, tag: str = "commit") -> int:
+        tid = self.subject.save(self.state)
+        otid = self.oracle.save(self.state)
+        self.commits[tid] = {"oracle_tid": otid,
+                             "state": snapshot_state(self.state)}
+        self._verify_commit(tid, tag)
+        return tid
+
+    def branch(self) -> str:
+        self._branch_counter += 1
+        name = f"b{self._branch_counter}"
+        self.subject.branch(name)
+        return name
+
+    def drop_branch(self) -> Optional[str]:
+        dag = self.subject.versions
+        names = [b for b in dag.branches if b != dag.head_branch]
+        if not names:
+            return None
+        name = names[int(self.rng.integers(0, len(names)))]
+        dag.delete_branch(name)
+        return name
+
+    def checkout(self, ref) -> Dict[str, Any]:
+        tid = self.subject.versions.resolve(ref)
+        state = self.subject.checkout(ref)
+        rec = self.commits.get(tid)
+        if rec is not None:
+            assert tree_equal(state, rec["state"]), \
+                self._ctx(f"checkout {ref!r} -> tid {tid}")
+        self.state = state
+        return state
+
+    def gc(self):
+        dry = self.subject.gc(dry_run=True)
+        total0 = self.subject.store.total_bytes()
+        real = self.subject.gc()
+        ctx = self._ctx("gc")
+        assert real.bytes_reclaimed == dry.bytes_reclaimed, \
+            (ctx, real.bytes_reclaimed, dry.bytes_reclaimed)
+        assert (total0 - self.subject.store.total_bytes()
+                == real.bytes_reclaimed), ctx
+        self.verify_live()
+        return real
+
+    def crash(self, point: Optional[str] = None,
+              flavor: Optional[str] = None) -> Optional[int]:
+        """One injected-crash round (requires ``faulty=True``): arm a
+        fault, attempt the save, reboot (fresh subject over the same
+        store, deep repair fsck), and resync with the oracle on whether
+        the attempt committed."""
+        from repro.core import (InjectedCrash, crash_matrix_points,
+                                delta_matrix_points)
+        assert self.fstore is not None, "VersionWorkload(faulty=True) required"
+        pts = (delta_matrix_points() if self.delta_chains
+               else crash_matrix_points())
+        if point is None:
+            point, flavor = pts[int(self.rng.integers(0, len(pts)))]
+        self.round_no += 1
+        self.fstore.clear()
+        fault = self.fstore.arm(point, flavor)
+        prev_head = self.subject.versions.head_commit()
+        try:
+            tid = self.subject.save(self.state)
+            crashed = False
+        except InjectedCrash:
+            crashed = True
+        self.fstore.clear()
+        tag = f"crash {point}/{flavor}"
+        if not crashed:
+            # the armed point never ran during this save (e.g. no delta
+            # admitted): the commit landed normally — record it.
+            assert fault.n_fired == 0, self._ctx(tag + " fired but survived")
+            otid = self.oracle.save(self.state)
+            self.commits[tid] = {"oracle_tid": otid,
+                                 "state": snapshot_state(self.state)}
+            self._verify_commit(tid, tag + " (did not fire)")
+            return tid
+        # reboot: fresh instance over the same store, deep repair fsck
+        self.subject = self._open_subject(fsck_on_open="deep")
+        head = self.subject.versions.head_commit()
+        if head is not None and head not in self.commits:
+            # refs named the attempt: it committed before the process
+            # died (refs CAS landed) — the attempt IS the truth.
+            assert head != prev_head, self._ctx(tag)
+            otid = self.oracle.save(self.state)
+            self.commits[head] = {"oracle_tid": otid,
+                                  "state": snapshot_state(self.state)}
+        if head is not None:
+            self._verify_commit(head, tag + " (post-reboot)")
+            self.state = self.subject.checkout(head)
+        return None
+
+    # -- verification --------------------------------------------------------
+    def _verify_commit(self, tid: int, tag: str) -> None:
+        rec = self.commits[tid]
+        ctx = self._ctx(f"{tag} tid {tid}")
+        m_s = self.subject.store.get_manifest(tid)
+        m_o = self.oracle.store.get_manifest(rec["oracle_tid"])
+        drop = ("stats", "time_id", "parent")
+        assert strip_manifest(m_s, drop) == strip_manifest(m_o, drop), ctx
+        for ps, po in zip(m_s["pods"].values(), m_o["pods"].values()):
+            assert ps["d"] == po["d"], ctx
+            assert (self.subject.store.get_pod(ps["d"])
+                    == self.oracle.store.get_pod(po["d"])), \
+                (ctx, "pod bytes differ", ps["d"])
+        assert tree_equal(self.subject.load(time_id=tid), rec["state"]), ctx
+
+    def verify_live(self) -> None:
+        """Every recorded commit still present in the subject store loads
+        bit-identical to its snapshot, and every pod it references
+        resolves to the oracle's bytes (the oracle is never gc'd)."""
+        live = set(self.subject.store.list_time_ids())
+        for tid in sorted(self.commits):
+            if tid not in live:
+                continue
+            rec = self.commits[tid]
+            ctx = self._ctx(f"verify-live tid {tid}")
+            assert tree_equal(self.subject.load(time_id=tid),
+                              rec["state"]), ctx
+            m = self.subject.store.get_manifest(tid)
+            for meta in m["pods"].values():
+                assert (self.subject.store.get_pod(meta["d"])
+                        == self.oracle.store.get_pod(meta["d"])), \
+                    (ctx, "pod bytes differ", meta["d"])
+
+    def verify_chain_depths(self, max_depth: Optional[int] = None) -> None:
+        if max_depth is None:
+            max_depth = self.subject.delta_policy.max_chain_depth
+        for d in self.subject.store.list_delta_pods():
+            depth = self.subject.store.pod_chain_depth(d)
+            assert depth <= max_depth, \
+                (self._ctx("chain-depth"), d, depth, max_depth)
+
+    # -- random driver -------------------------------------------------------
+    def run(self, n_rounds: int, *, p_branch: float = 0.15,
+            p_checkout: float = 0.2, p_gc: float = 0.15,
+            p_crash: float = 0.0) -> List[int]:
+        """`n_rounds` random rounds: mutate+commit by default, with
+        branch / checkout-and-commit / drop-branch+gc / crash rounds at
+        the given rates.  Ends with a full `verify_live` pass (and chain
+        depth bounds when delta chains are on)."""
+        tids: List[int] = []
+        for _ in range(n_rounds):
+            r = float(self.rng.random())
+            if r < p_branch and self.commits:
+                self.mutate()
+                self.branch()
+                tids.append(self.commit("branch-commit"))
+            elif r < p_branch + p_checkout and self.commits:
+                live = set(self.subject.store.list_time_ids())
+                cand = [t for t in self.commits if t in live]
+                if cand:
+                    self.checkout(cand[int(self.rng.integers(0, len(cand)))])
+                self.mutate()
+                tids.append(self.commit("post-checkout"))
+            elif r < p_branch + p_checkout + p_gc and len(self.commits) > 2:
+                self.drop_branch()
+                self.gc()
+            elif p_crash and r < p_branch + p_checkout + p_gc + p_crash:
+                self.crash()
+            else:
+                self.mutate()
+                tids.append(self.commit())
+            if self.delta_chains:
+                self.verify_chain_depths()
+        self.verify_live()
+        return tids

@@ -15,10 +15,14 @@ import threading
 import numpy as np
 import pytest
 
-from repro.core import (AsyncSaveError, AsyncSaver, Chipmink, FileStore,
-                        FaultyStore, InjectedCrash, MemoryStore, RetryPolicy,
-                        call_with_retries, crash_matrix_points)
+from repro.core import (AsyncSaveError, AsyncSaver, BundleAll, Chipmink,
+                        DeltaPolicy, FileStore, FaultyStore, InjectedCrash,
+                        MemoryStore, RetryPolicy, call_with_retries,
+                        crash_matrix_points, delta_matrix_points)
 from repro.version import CommitDAG, fsck, mark_and_sweep
+
+from proptest import base_state, snapshot_state, sparse_mutate_state, \
+    tree_equal
 
 
 def _no_debris(root):
@@ -535,6 +539,163 @@ def test_crash_during_async_save_then_fsck(tmp_path):
     t3 = ck.save(_mutate(s, 2))
     ck.wait()
     _assert_bitwise(ck.load(time_id=t3), _snap(s))
+
+
+# ---------------------------------------------------------------------------
+# the crash matrix, delta edition
+# ---------------------------------------------------------------------------
+
+def _mk_delta_ck(store, fsck_on_open=False):
+    """A checkpointer whose sparse saves publish chunk-granular deltas.
+
+    ``BundleAll`` keeps every leaf in one pod so a two-row touch dirties
+    a couple of chunks out of dozens — the cost model admits the delta.
+    ``max_chain_depth=2`` keeps the histories short enough that both the
+    delta-publish path (early saves) and the depth-cap whole-pod
+    fallback (later saves) are exercised by the same matrix."""
+    return Chipmink(store=store, use_kernel=False, fsck_on_open=fsck_on_open,
+                    chunk_bytes=1 << 10, policy=BundleAll(),
+                    delta_chains=True,
+                    delta_policy=DeltaPolicy(max_chain_depth=2))
+
+
+def _run_delta_crash_case(root, point, flavor, *, n_setup_saves, skip=0,
+                          seed=0):
+    """One delta-write crash: seed a sparse history, kill the next save
+    at (point, flavor), reboot with deep fsck, and demand the refs name
+    a complete commit bit-identical to the pre-crash oracle.
+
+    With ``max_chain_depth=2`` the attempt save is a delta publish when
+    ``n_setup_saves == 1`` (so ``put_pod_delta`` fires) and a depth-cap
+    whole-pod fallback when ``n_setup_saves == 3`` (so ``put_pod``
+    fires); the manifest and refs points fire in both shapes.  A cell
+    whose point isn't called during that save shape doesn't fire —
+    counted by the caller, not failed."""
+    fs = FaultyStore(FileStore(root))
+    ck = _mk_delta_ck(fs)
+    rng = np.random.default_rng(seed)
+    mrng = np.random.default_rng(seed + 100)
+    s = base_state(rng, rows=256)
+    oracle = {}
+    tids = []
+    for i in range(n_setup_saves):
+        sparse_mutate_state(s, mrng, i + 1)
+        tid = ck.save(s)
+        tids.append(tid)
+        oracle[tid] = snapshot_state(s)
+    if n_setup_saves > 1:
+        assert ck.store.stats.delta_pods_written >= 1
+
+    sparse_mutate_state(s, mrng, n_setup_saves + 1)
+    t_attempt = tids[-1] + 1
+    oracle[t_attempt] = snapshot_state(s)
+    fs.clear()
+    fault = fs.arm(point, flavor, skip=skip)
+    try:
+        ck.save(s)
+        crashed = False
+    except InjectedCrash:
+        crashed = True
+    if fault.n_fired == 0:
+        assert not crashed
+        return False               # point not on this save shape's path
+    assert crashed, f"{point}/{flavor} fired but the save survived"
+
+    # ---- reboot: fresh process over the same directory ----
+    ck2 = _mk_delta_ck(FileStore(root), fsck_on_open="deep")
+    head = ck2.versions.head_commit()
+    want = _expected_head(point, flavor, tids[-1], t_attempt)
+    assert head == want, f"{point}/{flavor}: head {head}, want {want}"
+    rep = fsck(ck2.store, repair=False, deep=True)
+    assert head not in rep.incomplete
+    assert tree_equal(ck2.load(time_id=head), oracle[head])
+    assert not _no_debris(root)
+    for d in ck2.store.list_pods():    # repair never leaves a deep chain
+        assert ck2.store.pod_chain_depth(d) <= 2
+
+    # the store stays writable: re-running the killed save must land and
+    # round-trip (catches a torn delta squatting on a content address)
+    t_redo = ck2.save(oracle[t_attempt])
+    assert tree_equal(ck2.load(time_id=t_redo), oracle[t_attempt])
+    assert fsck(ck2.store, repair=False, deep=True).clean
+    return True
+
+
+@pytest.mark.parametrize("point,flavor", delta_matrix_points(),
+                         ids=lambda v: str(v))
+def test_delta_crash_matrix(tmp_path, point, flavor):
+    n_ran = 0
+    for n_setup in (1, 3):
+        root = str(tmp_path / f"n{n_setup}")
+        os.makedirs(root)
+        if _run_delta_crash_case(root, point, flavor,
+                                 n_setup_saves=n_setup):
+            n_ran += 1
+    assert n_ran >= 1
+
+
+def _branchy_remat_history(fs):
+    """main t1 (whole) → branch "dead" t2/t3 (delta chain) → back on
+    main, replay the mutations so t4 dedups onto the delta-stored pod →
+    delete "dead".  GC must now re-materialize t4's pod before sweeping
+    its mid-chain base."""
+    ck = _mk_delta_ck(fs)
+    rng = np.random.default_rng(3)
+    s = base_state(rng, rows=256)
+    t1 = ck.save(s)
+    ck.branch("dead")
+    mrng = np.random.default_rng(42)
+    sparse_mutate_state(s, mrng, 1)
+    t2 = ck.save(s)
+    sparse_mutate_state(s, mrng, 2)
+    t3 = ck.save(s)
+    assert ck.store.stats.delta_pods_written >= 2
+
+    s_main = ck.checkout("main")
+    mrng = np.random.default_rng(42)           # replay the exact mutations
+    sparse_mutate_state(s_main, mrng, 1)
+    sparse_mutate_state(s_main, mrng, 2)
+    t4 = ck.save(s_main)
+    assert {p["d"] for p in ck.store.get_manifest(t4)["pods"].values()} \
+        == {p["d"] for p in ck.store.get_manifest(t3)["pods"].values()}
+    ck.versions.delete_branch("dead")
+    return ck, s_main, (t1, t2, t3, t4)
+
+
+@pytest.mark.parametrize("flavor", ["crash-before", "torn", "crash-after"])
+def test_gc_crash_mid_rematerialize_then_fsck(tmp_path, flavor):
+    """Kill GC inside the chain-rescue re-materialization.  The sweep
+    never ran, so every commit survives; a torn rescue leaves a corrupt
+    whole form SHADOWING a valid delta, which deep fsck heals by
+    dropping it.  After reboot the rescued commit is bit-identical and
+    a redo GC completes with dry-run == actual."""
+    fs = FaultyStore(FileStore(str(tmp_path)))
+    ck, s_final, (t1, t2, t3, t4) = _branchy_remat_history(fs)
+    snap = snapshot_state(s_final)
+
+    fs.clear()
+    fs.arm("rematerialize", flavor)
+    with pytest.raises(InjectedCrash):
+        ck.gc()
+
+    store2 = FileStore(str(tmp_path))
+    rep = fsck(store2, repair=True, deep=True)
+    if flavor == "torn":       # corrupt whole form shadowed a valid delta
+        assert rep.whole_forms_dropped
+    for tid in (t1, t2, t3, t4):   # sweep never ran: all commits live
+        assert tid not in rep.incomplete
+    ck2 = _mk_delta_ck(store2)
+    assert tree_equal(ck2.load(time_id=t4), snap)
+    assert not _no_debris(str(tmp_path))
+
+    dry = ck2.gc(dry_run=True)
+    real = ck2.gc()
+    assert real.n_commits_deleted == 2                     # t2, t3
+    assert real.n_pods_rematerialized == dry.n_pods_rematerialized
+    assert real.bytes_reclaimed == dry.bytes_reclaimed
+    assert tree_equal(ck2.load(time_id=t4), snap)
+    assert tree_equal(ck2.load(time_id=t1), ck.load(time_id=t1))
+    assert fsck(ck2.store, repair=False, deep=True).clean
 
 
 # ---------------------------------------------------------------------------

@@ -16,71 +16,11 @@ from repro.core import Chipmink, GraphCache, MemoryStore, build_graph
 from repro.core.async_saver import AsyncSaver
 from repro.core.graph import CHUNK, CONTAINER, LEAF, SCALAR
 
-from proptest import given, integers
-
-
-def _strip(manifest):
-    """Manifest minus the stats block (timings/reuse counters differ by
-    construction between the incremental and the oracle instance)."""
-    return {k: v for k, v in manifest.items() if k != "stats"}
-
-
-def _base_state(rng):
-    state = {
-        "params": {"emb": rng.standard_normal((512, 16)).astype(np.float32),
-                   "w": rng.standard_normal((32, 32)).astype(np.float32),
-                   "nested": {"a": rng.standard_normal(64).astype(np.float32)}},
-        "opt": {"mu": np.zeros((512, 16), np.float32)},
-        "step": 0,
-    }
-    state["params"]["tied"] = state["params"]["emb"]
-    return state
-
-
-def _mutate(state, rng, round_no):
-    """One randomized mutate step; returns a tag for failure reporting."""
-    choice = int(rng.integers(0, 7))
-    if choice == 0:
-        return "none"
-    if choice == 1:                      # in-place value mutation
-        idx = rng.integers(0, state["params"]["emb"].shape[0], size=4)
-        state["params"]["emb"][idx] += 1e-2
-        state["opt"]["mu"][idx] = 0.5
-        return "values"
-    if choice == 2:                      # host scalar change
-        state["step"] = round_no
-        return "scalar"
-    if choice == 3:                      # structural: add a leaf
-        state["params"][f"x{round_no}"] = rng.standard_normal(
-            (16, 4)).astype(np.float32)
-        return "add-leaf"
-    if choice == 4:                      # structural: remove an added leaf
-        for k in list(state["params"]):
-            if k.startswith("x"):
-                del state["params"][k]
-                return "del-leaf"
-        return "del-noop"
-    if choice == 5:                      # structural: reshape a leaf
-        r = 24 + round_no
-        state["params"]["w"] = rng.standard_normal((r, 32)).astype(np.float32)
-        return "reshape"
-    # structural: break / restore the shared reference
-    if state["params"]["tied"] is state["params"]["emb"]:
-        state["params"]["tied"] = state["params"]["emb"].copy()
-        return "untie"
-    state["params"]["tied"] = state["params"]["emb"]
-    return "retie"
-
-
-def _tree_equal(a, b):
-    if isinstance(a, dict) or isinstance(b, dict):
-        return (isinstance(a, dict) and isinstance(b, dict)
-                and a.keys() == b.keys()
-                and all(_tree_equal(a[k], b[k]) for k in a))
-    if hasattr(a, "shape") or hasattr(b, "shape"):
-        return (np.asarray(a).dtype == np.asarray(b).dtype
-                and np.array_equal(np.asarray(a), np.asarray(b)))
-    return a == b
+# the workload helpers live in the shared harness (tests/proptest.py);
+# the aliases keep the test bodies unchanged.
+from proptest import (base_state as _base_state, given, integers,
+                      mutate_state as _mutate, strip_manifest as _strip,
+                      tree_equal as _tree_equal)
 
 
 @given(seed=integers(0, 2 ** 31 - 1))

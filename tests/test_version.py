@@ -9,22 +9,18 @@ import pytest
 from repro.core import Chipmink, FileStore, MemoryStore
 from repro.version import CommitDAG, mark_and_sweep
 
+# workload state/manifest helpers live in the shared harness
+# (tests/proptest.py); the aliases keep the test bodies unchanged.
+from proptest import VersionWorkload, base_state, case_rng, strip_manifest
+
 
 def _mk_state(rng, rows=1024):
-    state = {
-        "params": {"emb": rng.standard_normal((rows, 16)).astype(np.float32),
-                   "w": rng.standard_normal((32, 32)).astype(np.float32)},
-        "opt": {"mu": np.zeros((rows, 16), np.float32)},
-        "step": 0,
-    }
-    state["params"]["tied"] = state["params"]["emb"]
-    return state
+    return base_state(rng, rows=rows)
 
 
 def _strip(manifest):
     """Manifest minus fields legitimately differing between instances."""
-    return {k: v for k, v in manifest.items()
-            if k not in ("stats", "time_id", "parent")}
+    return strip_manifest(manifest, drop=("stats", "time_id", "parent"))
 
 
 # ---------------------------------------------------------------------------
@@ -478,6 +474,21 @@ def test_copy_on_submit_respects_threshold():
 # ---------------------------------------------------------------------------
 # standalone mark_and_sweep over a hand-built DAG
 # ---------------------------------------------------------------------------
+
+# ---------------------------------------------------------------------------
+# randomized workload vs the from-scratch oracle (tests/proptest.py)
+# ---------------------------------------------------------------------------
+
+def test_version_workload_property():
+    """Seeded mutate/commit/branch/checkout/gc rounds: the incremental
+    subject must stay bit-identical to the from-scratch whole-pod oracle
+    at every commit, across checkouts and after every gc."""
+    for case in range(4):
+        rng = case_rng("test_version_workload_property", case)
+        wl = VersionWorkload(rng, rows=128, chunk_bytes=1 << 10)
+        wl.run(7)
+        assert len(wl.commits) >= 3
+
 
 def test_mark_and_sweep_extra_roots_protect_detached_commits():
     rng = np.random.default_rng(14)
