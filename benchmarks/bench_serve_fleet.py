@@ -1,0 +1,193 @@
+"""Serve-fleet benchmark: a 64+-session checkpoint fleet on one store.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve_fleet [--quick]
+
+Workload: ``n_sessions`` serving sessions multiplexed through one
+`repro.sessions.SessionService`, forked from a handful of root prompt
+templates (the realistic fleet pattern: a few system prompts, many
+users).  Traffic is **open-loop**: save requests arrive on a fixed
+exponential-interarrival schedule regardless of how long the previous
+save stalled, so a slow save shows up as a stall in the tail, not a
+slower schedule.  Each event appends to one session's ring-buffer cache
+(a few rows past its cursor) and snapshots it — the sparse-update
+regime the incremental pipeline targets.
+
+Reported per row:
+
+  * realized cross-session **dedup ratio** on the prefix-sharing traffic
+    (fleet logical tip bytes / physical union bytes; acceptance: > 1.5×),
+  * **p50/p99 save stall** over every save in the open-loop run,
+  * **bytes per session** actually held by the shared store,
+  * **evict latency** (p50/p99 over ``n_evict`` session evictions, each
+    reclaiming in O(session delta) via the refcount index) against the
+    **full-GC baseline** (one mark-and-sweep dry run over the whole
+    store — what eviction would cost without refcounts),
+  * oracle parity: the first eviction's reclaim must match a
+    mark-and-sweep dry run of the same branch deletion bit-for-bit.
+
+The summary dumps to ``experiments/bench/BENCH_serve_fleet.json`` for
+per-PR regression diffing.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, List
+
+import numpy as np
+
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "bench", "BENCH_serve_fleet.json")
+
+#: (n_sessions, n_roots, cache rows, d, saves/session, chunk_bytes,
+#:  n_evict, mean interarrival seconds)
+FULL_CFG = (64, 4, 256, 32, 5, 1 << 10, 8, 5e-4)
+QUICK_CFG = (64, 4, 96, 16, 3, 1 << 10, 8, 2e-4)
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    return float(np.percentile(np.asarray(xs), q))
+
+
+def bench_serve_fleet(quick: bool = False) -> List[Dict[str, Any]]:
+    from repro.core import MemoryStore
+    from repro.sessions import SESSION_NS, SessionService
+    from repro.version import mark_and_sweep
+
+    (n_sessions, n_roots, rows, d, saves_per, chunk,
+     n_evict, gap_s) = QUICK_CFG if quick else FULL_CFG
+    rng = np.random.default_rng(0)
+    svc = SessionService(MemoryStore(), pool_size=4, chunk_bytes=chunk,
+                         use_kernel=False, fsck_on_open=False)
+
+    # a few root prompt templates; every other session forks one and
+    # starts at 100% physical sharing with it
+    states: Dict[str, Dict[str, Any]] = {}
+    for r in range(n_roots):
+        sid = f"root{r}"
+        svc.open_session(sid)
+        st = {"cache": rng.standard_normal((rows, d)).astype(np.float32),
+              "pos": rows // 2}
+        svc.save_session(sid, st)
+        states[sid] = st
+    for i in range(n_sessions - n_roots):
+        sid = f"s{i}"
+        svc.open_session(sid, from_ref=SESSION_NS + f"root{i % n_roots}")
+        states[sid] = svc.resume_session(sid)
+    sids = sorted(states)
+
+    # open-loop arrival traffic: the schedule is fixed up front; a save
+    # that stalls does not delay later arrivals (they queue against the
+    # wall clock), so stalls surface in the percentiles.
+    n_events = n_sessions * saves_per
+    arrivals = np.cumsum(rng.exponential(scale=gap_s, size=n_events))
+    event_sids = [sids[int(k)] for k in rng.integers(0, len(sids),
+                                                     size=n_events)]
+    t_start = time.perf_counter()
+    for k in range(n_events):
+        lag = t_start + float(arrivals[k]) - time.perf_counter()
+        if lag > 0:
+            time.sleep(lag)
+        st = states[event_sids[k]]
+        # ring-buffer append: a couple of rows past the cursor change
+        pos = (int(st["pos"]) + 2) % rows
+        st["cache"][pos - 2:pos] = rng.standard_normal(
+            (2, d)).astype(np.float32)
+        st["pos"] = pos
+        svc.save_session(event_sids[k], st)
+    for ck in svc.pool:
+        ck.wait()
+    wall_s = time.perf_counter() - t_start
+
+    fleet = svc.fleet_stats()
+
+    # full-GC baseline: what ONE eviction would have to pay without the
+    # refcount index — a mark of the entire fleet's store
+    ck0 = svc.pool[0]
+    ck0.versions.sync()
+    t0 = time.perf_counter()
+    full = ck0.gc(full=True, dry_run=True)
+    full_gc_s = time.perf_counter() - t0
+
+    # evict n_evict leaf sessions; the first one is checked bit-identical
+    # against the mark-and-sweep oracle of the same branch deletion
+    victims = [s for s in sids if not s.startswith("root")][:n_evict]
+    oracle_match = True
+    reclaimed = 0
+    for j, sid in enumerate(victims):
+        if j == 0:
+            for ck in svc.pool:
+                ck.wait()
+            branch = SESSION_NS + sid
+            tip = ck0.versions.branches[branch]
+            ck0.versions.delete_branch(branch)
+            extra = tuple(ck._head for ck in svc.pool
+                          if ck._head is not None and ck._head != tip)
+            oracle = mark_and_sweep(svc.store, ck0.versions,
+                                    extra_roots=extra, dry_run=True)
+            ck0.versions.create_branch(branch, at=tip, switch=False)
+            real = svc.evict_session(sid)
+            oracle_match = (
+                set(real.deleted_pod_digests)
+                == set(oracle.deleted_pod_digests)
+                and real.bytes_reclaimed == oracle.bytes_reclaimed
+                and real.n_commits_deleted == oracle.n_commits_deleted)
+        else:
+            real = svc.evict_session(sid)
+        reclaimed += real.bytes_reclaimed
+
+    stalls_ms = [s * 1e3 for s in svc.save_stalls]
+    evicts_ms = [s * 1e3 for s in svc.evict_latencies]
+    row = {
+        "bench": "serve_fleet",
+        "n_sessions": n_sessions,
+        "n_saves": len(svc.save_stalls),
+        "wall_s": round(wall_s, 3),
+        "dedup_ratio": round(fleet.dedup_ratio, 3),
+        "bytes_per_session_kb": round(fleet.bytes_per_session / 1e3, 1),
+        "store_kb": round(fleet.store_bytes / 1e3, 1),
+        "p50_save_stall_ms": round(_percentile(stalls_ms, 50), 3),
+        "p99_save_stall_ms": round(_percentile(stalls_ms, 99), 3),
+        "n_evicted": len(victims),
+        "evict_p50_ms": round(_percentile(evicts_ms, 50), 3),
+        "evict_p99_ms": round(_percentile(evicts_ms, 99), 3),
+        "evict_reclaimed_kb": round(reclaimed / 1e3, 1),
+        "full_gc_baseline_ms": round(full_gc_s * 1e3, 3),
+        "full_gc_would_free_kb": round(full.bytes_reclaimed / 1e3, 1),
+        "oracle_match": bool(oracle_match),
+        "quick": quick,
+    }
+
+    os.makedirs(os.path.dirname(OUT_JSON), exist_ok=True)
+    with open(OUT_JSON, "w") as f:
+        json.dump({
+            "config": {"n_sessions": n_sessions, "n_roots": n_roots,
+                       "rows": rows, "d": d, "saves_per_session": saves_per,
+                       "chunk_bytes": chunk, "n_evict": n_evict,
+                       "mean_interarrival_s": gap_s, "quick": quick},
+            "save_stall_ms": {
+                "p50": row["p50_save_stall_ms"],
+                "p90": round(_percentile(stalls_ms, 90), 3),
+                "p99": row["p99_save_stall_ms"],
+                "max": round(max(stalls_ms), 3) if stalls_ms else 0.0},
+            "evict_ms": evicts_ms,
+            "summary": [row],
+        }, f, indent=2, sort_keys=True)
+    return [row]
+
+
+def main() -> None:
+    import argparse
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="small config for CI smoke runs")
+    args = p.parse_args()
+    for row in bench_serve_fleet(quick=args.quick):
+        print(",".join(f"{k}={v}" for k, v in row.items()))
+
+
+if __name__ == "__main__":
+    main()

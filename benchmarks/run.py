@@ -21,7 +21,8 @@ from typing import Callable, Dict, List
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from . import bench_core, bench_fingerprint, bench_incremental  # noqa: E402
+from . import (bench_core, bench_fingerprint, bench_incremental,  # noqa: E402
+               bench_serve_fleet)
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "bench")
@@ -42,6 +43,7 @@ BENCHES: Dict[str, Callable[[], List[Dict]]] = {
     "kernel_fingerprint": bench_core.bench_kernel,
     "fingerprint_batch": bench_fingerprint.bench_fingerprint,
     "incremental": bench_incremental.bench_incremental,
+    "serve_fleet": bench_serve_fleet.bench_serve_fleet,
 }
 
 

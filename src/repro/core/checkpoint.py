@@ -183,11 +183,54 @@ contract holds on any backend that has it (both built-ins do).  With the
 default ``multi_writer=False`` no lease traffic exists and the PR-6
 single-writer behavior is byte-identical.  ``close()`` drains the async
 pipeline and releases the lease so peers need not wait out the TTL.
+
+Multi-tenant sessions & refcount GC (``refcounts=True``)
+--------------------------------------------------------
+The fleet-serving scenario (`repro.sessions.SessionService`) multiplexes
+thousands of session branches onto one store, which changes what GC must
+cost: evicting ONE idle session cannot pay a full mark-and-sweep of the
+whole store.  Three hooks make that path O(session delta):
+
+  * ``save(state, branch="sessions/<id>", parent=<tip>)`` commits onto a
+    named ref without moving this instance's HEAD — the DAG's
+    `record(branch=)` create-or-advance path, so interleaved saves from
+    many sessions share one instance (the service swaps the per-session
+    detector/cache state around each call).
+  * ``refcounts=True`` maintains `repro.version.refcount.RefcountIndex`
+    in store meta (key ``pod_refcounts``) through the same
+    `compare_and_put_meta` CAS as refs/leases: per-pod manifest
+    refcounts, per-commit child counts, and physical delta-chain links,
+    updated inside the commit step (manifest put → **record_commit** →
+    refs CAS; idempotent per TimeID, so the retried commit unit never
+    double-counts).
+  * ``evict_branch(name)`` deletes the ref and immediately reclaims its
+    exclusive commits/pods via `refcount_reclaim` — a first-parent walk
+    from the dead tip that stops at the fork back into surviving
+    history, **bit-identical in what it frees to a full mark-and-sweep
+    of the same store** (the tested contract; mark-and-sweep stays on as
+    the fsck-time oracle and `fsck` rebuilds the index after repairs).
+    ``gc()`` with refcounts on drains the backlog of plain
+    `delete_branch` tips the same way; ``gc(full=True)`` forces the
+    mark-and-sweep oracle and trues the index up afterwards.
+  * ``shared_tids=True`` routes TimeID allocation through the CAS
+    counter even in single-writer mode — required when a *pool* of
+    instances shares one store without the full lease protocol (the
+    session service's configuration), since two local counters would
+    mint colliding commit ids.
+
+Large host leaves in async mode: copy-on-submit snapshots only leaves ≤
+``copy_on_submit_bytes``, so a larger writable numpy leaf still carries
+the must-not-mutate-before-`wait()` rule.  ``large_leaf_action``
+(default ``"warn"``) surfaces that footgun per offending leaf —
+``"raise"`` makes it an error, ``"ignore"`` restores the silent
+pre-PR-10 behavior, and ``copy_on_submit_bytes=0`` (the explicit
+copy-off opt-out) disables the guard with the copies.
 """
 from __future__ import annotations
 
 import hashlib
 import time as _time
+import warnings
 from typing import Any, Callable, Dict, Iterable, List, Optional, Set
 
 import msgpack
@@ -245,6 +288,9 @@ class Chipmink:
         refs_cas_backoff: Optional[RetryPolicy] = None,
         delta_chains: bool = False,
         delta_policy: Optional[DeltaPolicy] = None,
+        refcounts: bool = False,
+        shared_tids: bool = False,
+        large_leaf_action: str = "warn",
     ) -> None:
         self.store = store if store is not None else MemoryStore()
         self.policy = policy if policy is not None else LGA()
@@ -265,6 +311,12 @@ class Chipmink:
         self._graph_cache = (GraphCache(chunk_bytes=chunk_bytes)
                              if incremental else None)
         self.copy_on_submit_bytes = copy_on_submit_bytes
+        if large_leaf_action not in ("warn", "raise", "ignore"):
+            raise ValueError(
+                f"large_leaf_action must be 'warn', 'raise' or 'ignore', "
+                f"got {large_leaf_action!r}")
+        self.large_leaf_action = large_leaf_action
+        self._large_leaves_warned: Set[str] = set()
         self._prev_pods: Optional[PodAssignment] = None
         self._prev_graph: Optional[ObjectGraph] = None
         self._pod_digests: Dict[int, bytes] = {}   # prev save's pod digests
@@ -308,6 +360,18 @@ class Chipmink:
         self._head: Optional[TimeID] = self.versions.head_commit()
         self.last_checkout_stats = None
         self.save_stats: List[Dict[str, Any]] = []
+        #: pool mode: CAS TimeID counter without the full lease protocol
+        #: (see "Multi-tenant sessions" in the module docstring).
+        self._shared_tids = shared_tids
+        # Refcount index (incremental GC): loaded-or-rebuilt now so the
+        # first evict/gc never pays a surprise full scan mid-request.
+        self.refcounts = None
+        if refcounts:
+            from ..version.refcount import RefcountIndex
+            self.refcounts = RefcountIndex(self.store)
+            self.refcounts.ensure()
+        #: tips orphaned by delete_branch, awaiting an incremental gc()
+        self._gc_backlog: List[TimeID] = []
 
     # ------------------------------------------------------------------
     # multi-writer plumbing (leases, fenced TimeIDs)
@@ -316,8 +380,9 @@ class Chipmink:
         """Next TimeID.  Single-writer: the local counter.  Multi-writer:
         a CAS counter meta blob, seeded no lower than the local counter
         (which itself started past the newest on-disk manifest), so two
-        writers can never mint the same commit id."""
-        if self.leases is None:
+        writers can never mint the same commit id.  ``shared_tids`` opts
+        a lease-less pool of instances into the same CAS counter."""
+        if self.leases is None and not self._shared_tids:
             tid = self._next_time
             self._next_time += 1
             return tid
@@ -386,10 +451,16 @@ class Chipmink:
         touched_prefixes: Optional[Iterable[str]] = None,
         readonly_paths: Optional[Set[str]] = None,
         parent: Optional[TimeID] = None,
+        branch: Optional[str] = None,
     ) -> TimeID:
         time_id = self._alloc_time_id()
         if parent is None:
-            parent = self._head          # commit chains to HEAD by default
+            if branch is not None:
+                # commit onto a named ref: chain to ITS tip (None for a
+                # branch this commit will create), never to local HEAD.
+                parent = self.versions.branches.get(branch)
+            else:
+                parent = self._head      # commit chains to HEAD by default
 
         # graph build runs on the caller's thread: it is the snapshot that
         # makes overlapped async saves sound (scalar values are copied into
@@ -406,18 +477,43 @@ class Chipmink:
         # corrupt the overlapped body (jax.Arrays are immutable already;
         # large host leaves keep the must-not-mutate-before-wait rule).
         n_leaf_copies = 0
+        large_leaves: List[str] = []
         if self.async_mode and self.copy_on_submit_bytes > 0:
             for key, arr in graph.arrays.items():
-                if (isinstance(arr, np.ndarray) and arr.flags.writeable
-                        and arr.nbytes <= self.copy_on_submit_bytes):
-                    graph.arrays[key] = arr.copy()
-                    n_leaf_copies += 1
+                if isinstance(arr, np.ndarray) and arr.flags.writeable:
+                    if arr.nbytes <= self.copy_on_submit_bytes:
+                        graph.arrays[key] = arr.copy()
+                        n_leaf_copies += 1
+                    else:
+                        large_leaves.append(key)
+        if large_leaves and self.large_leaf_action != "ignore":
+            msg = (
+                f"async save {time_id}: host leaf(s) "
+                f"{sorted(large_leaves)[:4]}"
+                f"{'...' if len(large_leaves) > 4 else ''} exceed "
+                f"copy_on_submit_bytes={self.copy_on_submit_bytes} and are "
+                "snapshotted BY REFERENCE — mutating them in place before "
+                "wait() returns corrupts the in-flight save.  Either raise "
+                "copy_on_submit_bytes past the largest host leaf, call "
+                "wait() before mutating, or silence with "
+                "large_leaf_action='ignore'.")
+            if self.large_leaf_action == "raise":
+                if self._graph_cache is not None:
+                    # the cache advanced for a save that will never run —
+                    # same reset as a rejected submit below.
+                    self._graph_cache.invalidate()
+                raise ValueError(msg)
+            fresh = [k for k in large_leaves
+                     if k not in self._large_leaves_warned]
+            if fresh:
+                self._large_leaves_warned.update(fresh)
+                warnings.warn(msg, RuntimeWarning, stacklevel=2)
         t_graph = _time.perf_counter() - t0
 
         def work() -> None:
             self._save_body(time_id, graph, ginfo, accessed_vars,
                             touched_prefixes, readonly_paths, parent, t_graph,
-                            n_leaf_copies)
+                            n_leaf_copies, branch)
 
         if self.async_mode:
             try:
@@ -447,11 +543,11 @@ class Chipmink:
 
     def _save_body(self, time_id, graph, ginfo, accessed_vars,
                    touched_prefixes, readonly_paths, parent, t_graph,
-                   n_leaf_copies=0) -> None:
+                   n_leaf_copies=0, branch=None) -> None:
         try:
             self._save_body_inner(time_id, graph, ginfo, accessed_vars,
                                   touched_prefixes, readonly_paths, parent,
-                                  t_graph, n_leaf_copies)
+                                  t_graph, n_leaf_copies, branch)
         except BaseException as exc:
             # A half-applied save poisons the reuse chain: the graph cache
             # has already advanced (build happens at save() call time), so
@@ -463,7 +559,9 @@ class Chipmink:
             self._prev_pods = None
             self._prev_graph = None
             self._pod_digests = {}
-            self._head = self.versions.head_commit()
+            self._head = (self.versions.branches.get(branch)
+                          if branch is not None
+                          else self.versions.head_commit())
             # the failed save's intent pins nothing worth keeping: drop
             # it (best-effort — an expired lease is reaped by peers/fsck
             # anyway, and the original error must surface, not this).  A
@@ -521,7 +619,7 @@ class Chipmink:
 
     def _save_body_inner(self, time_id, graph, ginfo, accessed_vars,
                          touched_prefixes, readonly_paths, parent,
-                         t_graph, n_leaf_copies=0) -> None:
+                         t_graph, n_leaf_copies=0, branch=None) -> None:
         stats: Dict[str, Any] = {"time_id": time_id, "t_graph": t_graph,
                                  "n_leaf_copies": n_leaf_copies}
         if ginfo is not None:
@@ -801,10 +899,16 @@ class Chipmink:
                     self.leases.check(lease)
                 # the manifest put is the data commit point; the refs CAS
                 # in record() is the visibility commit point.  Both are
-                # idempotent (atomic rename; CAS rebases), so the pair is
-                # safe to retry as a unit on transient I/O errors.
+                # idempotent (atomic rename; CAS rebases; record_commit is
+                # a no-op for an already-counted TimeID), so the triple is
+                # safe to retry as a unit on transient I/O errors.  The
+                # refcount lands BEFORE the refs CAS: a crash in between
+                # leaves a counted dangling commit — conservative (pods
+                # kept, never lost) and exactly what rebuild() computes.
                 self.store.put_manifest(time_id, manifest)
-                self.versions.record(time_id, parent)
+                if self.refcounts is not None:
+                    self.refcounts.record_commit(time_id, manifest)
+                self.versions.record(time_id, parent, branch=branch)
 
         _, nr = call_with_retries(commit, self.retry_policy)
         stats["n_retries"] = n_retries + nr
@@ -883,10 +987,16 @@ class Chipmink:
     def delete_branch(self, name: str) -> None:
         """Drop a branch ref; its exclusive commits become GC-eligible.
         Drains in-flight saves first — an async commit still targeting
-        the branch would otherwise resurrect it after the deletion."""
+        the branch would otherwise resurrect it after the deletion.
+        With refcounts on, the orphaned tip is remembered so the next
+        ``gc()`` reclaims it incrementally (O(branch delta)); call
+        ``evict_branch`` to delete and reclaim in one step."""
         self.wait()
         with self.saver.l_ns:
+            tip = self.versions.branches.get(name)
             self.versions.delete_branch(name)
+            if self.refcounts is not None and tip is not None:
+                self._gc_backlog.append(tip)
 
     def checkout(self, ref: Any = None, *, like: Any = None) -> Any:
         """Restore the state of a branch / tag / TimeID, delta-aware.
@@ -925,22 +1035,103 @@ class Chipmink:
         self.wait()
         return self.versions.diff(a, b)
 
-    def gc(self, *, dry_run: bool = False):
-        """Mark-and-sweep pods/manifests unreachable from branch refs,
-        tags, and HEAD.  Drains in-flight async saves first, so a pending
-        manifest always lands — and roots its pods — before the mark
-        phase runs.  Swept digests are pruned from the thesaurus so a
+    def gc(self, *, dry_run: bool = False, full: Optional[bool] = None):
+        """Reclaim pods/manifests unreachable from branch refs, tags,
+        and HEAD.  Drains in-flight async saves first, so a pending
+        manifest always lands — and roots its pods — before anything is
+        marked.  Swept digests are pruned from the thesaurus so a
         future save rewrites, not aliases, them.  `dry_run=True` reports
         the same reclaim the real sweep would free, deleting nothing.
+
+        With ``refcounts=True`` the default is the **incremental** path:
+        drain the backlog of `delete_branch` tips through
+        `refcount_reclaim` — O(sum of the deleted branches' deltas), not
+        O(store).  ``full=True`` forces the mark-and-sweep oracle (which
+        also catches garbage the backlog can't know about, e.g. commits
+        orphaned by a peer process) and trues the refcount index up
+        afterwards.  Without refcounts every gc is full.
         """
         self.wait()
-        from ..version import mark_and_sweep
+        from ..version import mark_and_sweep, refcount_reclaim
+        if full is None:
+            full = self.refcounts is None
         with self.saver.l_ns:
+            if not full and self.refcounts is not None:
+                stats = refcount_reclaim(self.store, self.versions,
+                                         self.refcounts,
+                                         list(self._gc_backlog),
+                                         extra_roots=(self._head,),
+                                         dry_run=dry_run,
+                                         leases=self.leases)
+                if not dry_run:
+                    self._gc_backlog.clear()
+                    if stats.deleted_pod_digests:
+                        self.thesaurus.prune(stats.deleted_pod_digests)
+                return stats
             stats = mark_and_sweep(self.store, self.versions,
                                    extra_roots=(self._head,),
                                    dry_run=dry_run,
                                    leases=self.leases)
-            if not dry_run and stats.deleted_pod_digests:
+            if not dry_run:
+                self._gc_backlog.clear()
+                if stats.deleted_pod_digests:
+                    self.thesaurus.prune(stats.deleted_pod_digests)
+                if self.refcounts is not None:
+                    # the sweep bypassed the index by design (it is the
+                    # oracle); reconcile it with the store it just edited.
+                    self.refcounts.rebuild()
+        return stats
+
+    def evict_branch(self, name: str, *, dry_run: bool = False):
+        """Delete branch `name` and reclaim its exclusive commits and
+        pods immediately — the multi-tenant eviction path.  Requires
+        ``refcounts=True``; cost scales with the branch's delta against
+        surviving history, not store size, and what it frees is
+        bit-identical to a full mark-and-sweep after the same deletion
+        (the tested contract).  ``dry_run=True`` estimates the reclaim
+        without touching the ref or the store.  Returns `GCStats`.
+        """
+        if self.refcounts is None:
+            raise RuntimeError("evict_branch requires refcounts=True "
+                               "(otherwise: delete_branch + gc)")
+        self.wait()
+        from ..version import refcount_reclaim
+        with self.saver.l_ns:
+            # a pool peer may have advanced the branch since we last read
+            # refs: evict the CURRENT tip, and fail loudly on a branch a
+            # peer already deleted.
+            self.versions.sync()
+            tip = self.versions.branches.get(name)
+            if tip is None:
+                raise KeyError(f"unknown branch {name!r}")
+            # the live in-memory state pins its own commit (extra_roots)
+            # — unless that commit IS the evicted tip, in which case the
+            # live incremental state dies with the branch: reset it like
+            # a failed save, so the next save rebuilds from scratch
+            # instead of delta-ing against reclaimed pods.
+            head_root = self._head if self._head != tip else None
+            if dry_run:
+                # the branch still exists, so its own tip must not stop
+                # the walk (exclude_refs) — same plan the real path runs.
+                return refcount_reclaim(self.store, self.versions,
+                                        self.refcounts, [tip],
+                                        extra_roots=(head_root,),
+                                        exclude_refs=(name,),
+                                        dry_run=True,
+                                        leases=self.leases)
+            if self._head == tip:
+                self._prev_pods = None
+                self._prev_graph = None
+                self._pod_digests = {}
+                if self._graph_cache is not None:
+                    self._graph_cache.invalidate()
+                self._head = None
+            self.versions.delete_branch(name)
+            stats = refcount_reclaim(self.store, self.versions,
+                                     self.refcounts, [tip],
+                                     extra_roots=(head_root,),
+                                     leases=self.leases)
+            if stats.deleted_pod_digests:
                 self.thesaurus.prune(stats.deleted_pod_digests)
         return stats
 
@@ -968,6 +1159,10 @@ class Chipmink:
                 if existing:
                     self._next_time = max(self._next_time,
                                           existing[-1] + 1)
+                if self.refcounts is not None:
+                    # version.fsck rebuilt the persisted index after its
+                    # repairs; adopt that truth locally.
+                    self.refcounts.ensure()
         self.last_fsck = report
         return report
 

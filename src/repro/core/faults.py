@@ -60,8 +60,12 @@ class InjectedCrash(BaseException):
 #: ``rematerialize`` is `rematerialize_pod` — GC's mid-chain-sweep
 #: rescue write (torn flavor: the whole form lands truncated while the
 #: delta form survives, rematerialize_pod's own crash window).
+#: ``delete_pod`` / ``delete_manifest`` are the sweep side (gc, fsck,
+#: refcount eviction) — crash flavors model dying mid-reclaim (torn has
+#: no meaning for a delete: it either unlinked or it didn't).
 WRITE_POINTS = ("put_pod", "put_manifest", "put_meta", "cas_meta",
-                "cas_lease", "put_pod_delta", "rematerialize")
+                "cas_lease", "put_pod_delta", "rematerialize",
+                "delete_pod", "delete_manifest")
 #: read-path points (transient/latency only; reads have no torn mode —
 #: they never mutate the store).  ``get_lease`` is `get_meta` on the
 #: lease blob, split from ``get_meta`` for the same reason as above.
@@ -270,7 +274,14 @@ class FaultyStore(BaseStore):
         return self.inner.pod_nbytes(digest_hex)
 
     def delete_pod(self, digest_hex: str) -> int:
-        return self.inner.delete_pod(digest_hex)
+        f = self._fire("delete_pod")
+        if f is None:
+            return self.inner.delete_pod(digest_hex)
+        if f.mode == "transient":
+            raise f.exc(f"injected transient error: delete_pod {digest_hex}")
+        if f.when == "after":
+            self.inner.delete_pod(digest_hex)
+        raise InjectedCrash(f"crash at delete_pod[{f.when}] {digest_hex}")
 
     # -- delta-chain pods ----------------------------------------------------
     def put_pod_delta(self, digest_hex: str, delta_blob: bytes) -> bool:
@@ -363,7 +374,15 @@ class FaultyStore(BaseStore):
         return self.inner.manifest_nbytes(time_id)
 
     def delete_manifest(self, time_id: int) -> int:
-        return self.inner.delete_manifest(time_id)
+        f = self._fire("delete_manifest")
+        if f is None:
+            return self.inner.delete_manifest(time_id)
+        if f.mode == "transient":
+            raise f.exc(
+                f"injected transient error: delete_manifest {time_id}")
+        if f.when == "after":
+            self.inner.delete_manifest(time_id)
+        raise InjectedCrash(f"crash at delete_manifest[{f.when}] {time_id}")
 
     # -- meta ---------------------------------------------------------------
     def put_meta(self, key: str, data: bytes) -> None:

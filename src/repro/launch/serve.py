@@ -1,33 +1,63 @@
-"""Serving driver: batched request decoding with incremental session
-persistence.
+"""Serving driver: batched request decoding with multi-session
+incremental persistence over one shared store.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+        --reduced --sessions 4 --store memory
 
 Serving state (KV caches / SSM states + request cursors) is a massive,
 evolving, append-mostly object graph — Chipmink's best case: between
 snapshots only the ring-buffer slices written since the last save change,
 so session checkpoints (for preemption recovery / session migration) cost
 O(delta), not O(cache).
+
+The driver runs ``n_sessions`` concurrent sessions through one
+`repro.sessions.SessionService`: each session is a branch in the shared
+store, sessions share their prompt prefix (the realistic fleet pattern —
+system prompts, few-shot headers), so their caches dedup pod-for-pod at
+the content-addressed layer, and the per-session incremental pipeline
+keeps every later snapshot O(tokens since last snapshot).  At the end an
+idle session is evicted to exercise the O(delta) refcount reclaim.  CLI
+flags pick the store backend (``--store memory|file``), async save
+submission (``--async``), and the session count.
 """
 from __future__ import annotations
 
 import argparse
+import tempfile
 import time
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config
-from ..core import Chipmink, LGA, MemoryStore
+from ..core import FileStore, LGA, MemoryStore
 from ..models.model import api, init_model_params
+from ..sessions import SessionService
 from ..train.serve_step import make_decode_step
+
+
+def _make_store(store: str, store_dir: Optional[str]):
+    if store == "memory":
+        return MemoryStore()
+    if store == "file":
+        root = store_dir or tempfile.mkdtemp(prefix="chipmink_serve_")
+        return FileStore(root)
+    raise ValueError(f"unknown store backend {store!r}")
 
 
 def serve(arch: str, *, n_requests: int = 4, gen_tokens: int = 32,
           cache_len: int = 128, save_every: int = 8,
-          reduced: bool = True, log: bool = True) -> Dict:
+          reduced: bool = True, log: bool = True,
+          n_sessions: int = 1, store: str = "memory",
+          store_dir: Optional[str] = None, async_mode: bool = False,
+          evict_last: bool = True) -> Dict:
+    """Decode ``gen_tokens`` tokens for ``n_sessions`` sessions of
+    ``n_requests`` requests each, snapshotting every session every
+    ``save_every`` tokens onto its own branch of one shared store.
+    Returns tokens, per-snapshot stats (TimeID order), the service, and
+    the fleet roll-up (dedup ratio, save-stall percentiles)."""
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -36,47 +66,87 @@ def serve(arch: str, *, n_requests: int = 4, gen_tokens: int = 32,
     step = jax.jit(make_decode_step(cfg))
 
     rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab, size=(n_requests, 8)).astype(np.int32)
-    cache = m.init_cache(cfg, n_requests, cache_len)
-    if cfg.family == "encdec":
-        from ..models import whisper
-        frames = jnp.asarray(
-            rng.standard_normal((n_requests, cfg.encoder.n_frames,
-                                 cfg.d_model)), jnp.bfloat16)
-        enc = whisper.encode(params, frames, cfg)
-        cache["cross"] = whisper.build_cross_cache(params, enc, cfg)
+    # all sessions share the first 7 prompt tokens (the fleet's common
+    # prefix); the 8th is per-session, so caches diverge from there.
+    shared = rng.integers(0, cfg.vocab, size=(n_requests, 7)).astype(np.int32)
 
-    # fine chunks: ring-buffer KV writes between snapshots touch only a
-    # few slots, and flat-range chunks isolate them
-    ck = Chipmink(MemoryStore(), LGA(), chunk_bytes=1 << 11, async_mode=False)
-    generated: List[np.ndarray] = []
-    logits = None
-    snap_stats = []
+    svc = SessionService(
+        _make_store(store, store_dir),
+        # one pool slot per session (capped) avoids rebind drains in the
+        # round-robin save loop below
+        pool_size=min(max(1, n_sessions), 4),
+        policy=LGA(),
+        # fine chunks: ring-buffer KV writes between snapshots touch only
+        # a few slots, and flat-range chunks isolate them
+        chunk_bytes=1 << 11,
+        async_mode=async_mode)
+
+    class Sess:
+        pass
+
+    sessions: List[Sess] = []
+    for s in range(n_sessions):
+        svc.open_session(f"s{s}")
+        sess = Sess()
+        own = rng.integers(0, cfg.vocab, size=(n_requests, 1)).astype(np.int32)
+        sess.prompts = np.concatenate([shared, own], axis=1)
+        sess.cache = m.init_cache(cfg, n_requests, cache_len)
+        if cfg.family == "encdec":
+            from ..models import whisper
+            frames = jnp.asarray(
+                rng.standard_normal((n_requests, cfg.encoder.n_frames,
+                                     cfg.d_model)), jnp.bfloat16)
+            enc = whisper.encode(params, frames, cfg)
+            sess.cache["cross"] = whisper.build_cross_cache(params, enc, cfg)
+        sess.logits = None
+        sess.generated = []
+        sessions.append(sess)
+
     t0 = time.time()
-    total = prompts.shape[1] + gen_tokens
+    total = sessions[0].prompts.shape[1] + gen_tokens
     for i in range(total):
-        if i < prompts.shape[1]:
-            tok = jnp.asarray(prompts[:, i:i + 1])
-        else:
-            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-            generated.append(np.asarray(tok))
-        logits, cache = step(params, cache, tok)
-        if (i + 1) % save_every == 0:
-            tid = ck.save({"cache": cache,
-                           "cursor": {"pos": i + 1}})
-            s = ck.save_stats[-1]
-            snap_stats.append(s)
-            if log:
-                print(f"tok {i+1:3d}: session snapshot TimeID={tid} "
-                      f"wrote {s['bytes_written']/1e3:.1f} KB "
-                      f"({s['pods_written']}/{s['n_pods']} pods)", flush=True)
+        for s, sess in enumerate(sessions):
+            if i < sess.prompts.shape[1]:
+                tok = jnp.asarray(sess.prompts[:, i:i + 1])
+            else:
+                tok = jnp.argmax(sess.logits, axis=-1)[:, None]\
+                    .astype(jnp.int32)
+                sess.generated.append(np.asarray(tok))
+            sess.logits, sess.cache = step(params, sess.cache, tok)
+            if (i + 1) % save_every == 0:
+                tid = svc.save_session(f"s{s}", {"cache": sess.cache,
+                                                 "cursor": {"pos": i + 1}})
+                if log:
+                    print(f"tok {i+1:3d} s{s}: snapshot TimeID={tid} "
+                          f"(stall {svc.save_stalls[-1]*1e3:.1f} ms)",
+                          flush=True)
+    for ck in svc.pool:
+        ck.wait()
     wall = time.time() - t0
-    out = np.concatenate(generated, axis=1) if generated else np.zeros((n_requests, 0))
+
+    # TimeID order == submission order (the CAS counter is monotone), so
+    # the merged trajectory reads like the old single-session driver's.
+    snap_stats = sorted((st for ck in svc.pool for st in ck.save_stats),
+                        key=lambda st: st["time_id"])
+    evict_stats = None
+    if evict_last and n_sessions > 1:
+        evict_stats = svc.evict_session(f"s{n_sessions - 1}")
+        if log:
+            print(f"evicted s{n_sessions-1}: "
+                  f"{evict_stats.bytes_reclaimed/1e3:.1f} KB reclaimed in "
+                  f"{svc.evict_latencies[-1]*1e3:.1f} ms")
+    fleet = svc.fleet_stats()
     if log:
-        print(f"served {n_requests} requests × {gen_tokens} tokens "
-              f"in {wall:.1f}s; snapshots: {len(snap_stats)}")
-    return {"tokens": out, "chipmink": ck, "snap_stats": snap_stats,
-            "wall": wall}
+        print(f"served {n_sessions} sessions × {n_requests} requests × "
+              f"{gen_tokens} tokens in {wall:.1f}s; "
+              f"snapshots: {len(snap_stats)}, "
+              f"dedup {fleet.dedup_ratio:.2f}x, "
+              f"p99 stall {fleet.p99_save_stall_s*1e3:.1f} ms")
+    out = (np.concatenate(sessions[0].generated, axis=1)
+           if sessions[0].generated else np.zeros((n_requests, 0)))
+    return {"tokens": out, "chipmink": svc.pool[0], "service": svc,
+            "snap_stats": snap_stats, "fleet": fleet.as_dict(),
+            "evict_stats": evict_stats, "wall": wall}
 
 
 def main() -> None:
@@ -85,9 +155,18 @@ def main() -> None:
     p.add_argument("--requests", type=int, default=4)
     p.add_argument("--gen-tokens", type=int, default=32)
     p.add_argument("--reduced", action="store_true", default=True)
+    p.add_argument("--sessions", type=int, default=1,
+                   help="concurrent sessions sharing the store")
+    p.add_argument("--store", choices=("memory", "file"), default="memory",
+                   help="store backend")
+    p.add_argument("--store-dir", default=None,
+                   help="file-store root (default: fresh temp dir)")
+    p.add_argument("--async", dest="async_mode", action="store_true",
+                   help="overlapped async saves")
     a = p.parse_args()
     serve(a.arch, n_requests=a.requests, gen_tokens=a.gen_tokens,
-          reduced=a.reduced)
+          reduced=a.reduced, n_sessions=a.sessions, store=a.store,
+          store_dir=a.store_dir, async_mode=a.async_mode)
 
 
 if __name__ == "__main__":

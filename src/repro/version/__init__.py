@@ -13,9 +13,14 @@ Three pillars on top of `repro.core`:
     mark_and_sweep — GC pods and manifests unreachable from any ref, with
                      dry-run reclaim estimates and a refs-CAS validation
                      between mark and sweep (gc.py)
+    refcount_reclaim — O(delta) eviction of dead branch tips driven by
+                     the persistent `RefcountIndex` in store meta;
+                     bit-identical in what it frees to mark_and_sweep,
+                     which stays on as the fsck-time oracle
+                     (refcount.py)
     fsck           — recovery scan: classify torn saves, roll refs back
-                     to the newest complete commit, sweep debris
-                     (fsck.py)
+                     to the newest complete commit, sweep debris, and
+                     rebuild the refcount index (fsck.py)
 
 `Chipmink` exposes the user surface (`branch` / `checkout` / `log` /
 `tag` / `diff` / `gc`); this package holds the mechanism.  Imports run
@@ -26,8 +31,10 @@ from .checkout import CheckoutStats, delta_checkout
 from .commit_graph import DEFAULT_BRANCH, CommitDAG, PodDelta, RefsCASError
 from .fsck import FsckReport, fsck
 from .gc import GCStats, mark_and_sweep
+from .refcount import REFCOUNTS_META_KEY, RefcountIndex, refcount_reclaim
 
 __all__ = [
     "CheckoutStats", "CommitDAG", "DEFAULT_BRANCH", "FsckReport", "GCStats",
-    "PodDelta", "RefsCASError", "delta_checkout", "fsck", "mark_and_sweep",
+    "PodDelta", "REFCOUNTS_META_KEY", "RefcountIndex", "RefsCASError",
+    "delta_checkout", "fsck", "mark_and_sweep", "refcount_reclaim",
 ]

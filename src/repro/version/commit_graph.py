@@ -288,18 +288,28 @@ class CommitDAG:
                 return self.branches.get(self.head_branch)
             return self.detached
 
-    def record(self, time_id: int, parent: Optional[int]) -> None:
-        """Register a fresh commit and advance HEAD onto it.
+    def record(self, time_id: int, parent: Optional[int],
+               branch: Optional[str] = None) -> None:
+        """Register a fresh commit and advance a ref onto it.
 
-        On a branch, the branch ref advances; detached HEAD just moves
-        (the commit is reachable only through HEAD until branched/tagged —
-        exactly git's detached-commit semantics, and exactly what GC
-        protects via the HEAD root).
+        Default (`branch=None`): HEAD advances.  On a branch, the branch
+        ref advances; detached HEAD just moves (the commit is reachable
+        only through HEAD until branched/tagged — exactly git's
+        detached-commit semantics, and exactly what GC protects via the
+        HEAD root).
+
+        With an explicit `branch`, THAT ref is created-or-advanced and
+        HEAD is left alone — the multi-tenant path: a session service
+        commits onto ``sessions/<id>`` refs without ever moving its own
+        checkout, so thousands of sessions can interleave saves through
+        one instance.
         """
         with self._lock:
             def mut() -> None:
                 self._parents[time_id] = parent
-                if self.head_branch is not None:
+                if branch is not None:
+                    self.branches[branch] = time_id
+                elif self.head_branch is not None:
                     self.branches[self.head_branch] = time_id
                 else:
                     self.detached = time_id
@@ -330,6 +340,13 @@ class CommitDAG:
                         f"cannot delete the current branch {name!r}")
                 del self.branches[name]
             self._commit_refs(mut)
+
+    def branches_under(self, prefix: str) -> Dict[str, int]:
+        """Branches whose name starts with `prefix` (namespace listing —
+        e.g. ``sessions/`` for the session service's live set)."""
+        with self._lock:
+            return {n: t for n, t in self.branches.items()
+                    if n.startswith(prefix)}
 
     def create_tag(self, name: str, at: Optional[Ref] = None) -> int:
         with self._lock:

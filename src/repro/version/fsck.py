@@ -84,6 +84,7 @@ import msgpack
 from ..core.lease import LEASES_META_KEY, LeaseManager
 from ..core.store import BaseStore
 from .commit_graph import DEFAULT_BRANCH, REFS_META_KEY
+from .refcount import REFCOUNTS_META_KEY
 
 #: attempts to land the repaired refs blob via CAS before giving up.
 MAX_REPAIR_RETRIES = 4
@@ -126,6 +127,11 @@ class FsckReport:
     n_leases_live: int = 0
     gc_phase_reset: bool = False
     swept_pod_digests: List[str] = dataclasses.field(default_factory=list)
+    #: the persisted refcount index (version/refcount.py) disagreed with
+    #: the post-repair store and was rebuilt — drift is damage: a crash
+    #: between a save's manifest put and its record_commit, or mid-evict
+    #: between the index CAS and the deletes.
+    refcounts_rebuilt: bool = False
     t_scan: float = 0.0
     t_repair: float = 0.0
 
@@ -140,7 +146,7 @@ class FsckReport:
                     or self.whole_forms_dropped
                     or self.n_tmp_removed or self.n_manifests_swept
                     or self.n_pods_swept or self.leases_reaped
-                    or self.gc_phase_reset)
+                    or self.gc_phase_reset or self.refcounts_rebuilt)
 
     def as_dict(self) -> Dict[str, Any]:
         d = {k: v for k, v in self.__dict__.items()
@@ -343,6 +349,12 @@ def fsck(store: BaseStore, *, repair: bool = True, deep: bool = False,
                 refs_ok = True
             except Exception:
                 refs_ok = False
+        # a current branch with no commits yet has no branches entry (an
+        # "unborn" branch — e.g. the default branch of a store whose only
+        # commits live on session branches); that is healthy state, not a
+        # deleted branch, and must survive the repair as-is.
+        head_unborn = refs_ok and head_branch is not None \
+            and head_branch not in branches
         if not refs_ok:
             # refs blob absent (pre-versioning store) or torn: rebuild
             # from the complete manifests, bootstrap-style — every
@@ -391,7 +403,8 @@ def fsck(store: BaseStore, *, repair: bool = True, deep: bool = False,
             kind, name = key.split(":", 1)
             (branches if kind == "branch" else tags).pop(name, None)
 
-        if head_branch is not None and head_branch not in branches:
+        if head_branch is not None and head_branch not in branches \
+                and not head_unborn:
             # the current branch itself was deleted: fall back to the
             # default branch, else any surviving branch, else detach at
             # the newest complete commit.
@@ -448,5 +461,15 @@ def fsck(store: BaseStore, *, repair: bool = True, deep: bool = False,
             rep.swept_pod_digests.append(d)
     rep.n_tmp_removed = store.sweep_tmp()
     rep.legacy_head_repaired = store.repair_head()
+
+    # ---- 5. true up the refcount index ----------------------------------
+    # Only for stores that opted in (the blob exists): the index is pure
+    # derived state, so after any repair the store itself is the truth —
+    # rebuild and flag drift (a crash between a save's manifest put and
+    # its record_commit, or mid-evict between the index CAS and the
+    # deletes, leaves exactly this signature).
+    if store.get_meta(REFCOUNTS_META_KEY) is not None:
+        from .refcount import RefcountIndex    # circular-free: runtime
+        rep.refcounts_rebuilt = RefcountIndex(store).rebuild()
     rep.t_repair = _time.perf_counter() - t0
     return rep

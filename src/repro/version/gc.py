@@ -65,6 +65,20 @@ The caller must quiesce in-flight saves first (a pending manifest is
 invisible to the mark phase until it lands); `Chipmink.gc` drains its
 async pipeline before calling in here, and must afterwards prune swept
 digests from the thesaurus so future saves rewrite — not alias — them.
+
+Relationship to refcount GC (version/refcount.py)
+-------------------------------------------------
+Mark-and-sweep is O(store) per collection; the multi-tenant eviction
+path (`Chipmink.evict_branch`, `repro.sessions`) instead maintains a
+persistent refcount index at commit time and reclaims dead branch tips
+in O(branch delta) via `refcount_reclaim`.  The contract between the
+two: **for the same dead tips, refcount reclaim frees the bit-identical
+set of commits and pod digests this collector would** (including the
+same delta-chain rescues) — asserted in the test suite with this
+collector as the oracle.  Mark-and-sweep stays authoritative where
+refcounts cannot reach: `Chipmink.gc(full=True)` for garbage produced
+outside the delete_branch/evict path, and fsck-time repair, both of
+which rebuild the index afterwards.
 """
 from __future__ import annotations
 

@@ -19,6 +19,15 @@ Two layers:
   against a from-scratch whole-pod oracle (``incremental=False,
   delta_chains=False``): stripped manifests, per-digest pod bytes, and
   loaded trees must all be bit-identical at every step.
+
+* a multi-session fleet workload: the `SessionWorkload` driver — open /
+  fork / interleaved per-session mutate+save / resume / evict rounds
+  over a `SessionService`, with every eviction's refcount reclaim
+  verified bit-identical (same deleted digests, commits, and bytes)
+  against a mark-and-sweep dry-run oracle of the same deletion, the
+  persistent refcount index checked against a from-scratch rebuild, and
+  optional crash-mid-evict rounds (``faulty=True``) recovered by
+  reboot + fsck (which rebuilds the index) + full-GC.
 """
 from __future__ import annotations
 
@@ -455,3 +464,293 @@ class VersionWorkload:
                 self.verify_chain_depths()
         self.verify_live()
         return tids
+
+
+# ---------------------------------------------------------------------------
+# multi-session fleet workload
+# ---------------------------------------------------------------------------
+
+#: (point, flavor, skip) triples killing an eviction at each distinct
+#: write it performs, in order: the branch-ref deletion CAS, the refcount
+#: index CAS, the manifest deletes, the pod deletes.  Deletes are atomic,
+#: so "torn" has no meaning here — only crash flavors.
+EVICT_CRASH_POINTS = [
+    ("cas_meta", "crash-before", 0),        # refs delete never lands
+    ("cas_meta", "crash-after", 0),         # branch gone, nothing reclaimed
+    ("cas_meta", "crash-before", 1),        # index CAS never lands
+    ("cas_meta", "crash-after", 1),         # index updated, no deletes ran
+    ("delete_manifest", "crash-before", 0),
+    ("delete_manifest", "crash-after", 0),
+    ("delete_pod", "crash-before", 0),
+    ("delete_pod", "crash-after", 0),
+]
+
+
+class SessionWorkload:
+    """Seedable multi-session workload over one `SessionService`.
+
+    Sessions open (sometimes forking another session's branch), mutate
+    and save interleaved on a shared store, resume (the migration /
+    checkout path), and evict.  Every save is read back bit-identical;
+    every resume must restore the branch tip's snapshot; every eviction
+    is verified **bit-identical against the mark-and-sweep oracle**: the
+    branch ref is transiently deleted, a full-scan dry run records what
+    mark-and-sweep would free, the ref is restored, and the real
+    refcount-driven `evict_session` must delete exactly the same pod
+    digests / commits / bytes — then a store-wide sweep dry run must
+    find nothing left, and the persistent refcount index must equal a
+    from-scratch rebuild.
+
+    With ``faulty=True``, `crash_evict` kills the eviction at an armed
+    store write (`EVICT_CRASH_POINTS`), reboots the service over the
+    same store with a deep-repair fsck (which rebuilds the refcount
+    index from the surviving manifests), asserts the rebuilt index
+    matches a fresh scan, full-GCs the half-evict debris, and re-adopts
+    every surviving session via `resume_session`, bit-identical.
+    """
+
+    def __init__(self, rng: np.random.Generator, *, rows: int = 96,
+                 chunk_bytes: int = 1 << 10, pool_size: int = 2,
+                 max_sessions: int = 6, faulty: bool = False):
+        from repro.core import FaultyStore, MemoryStore
+
+        self.rng = rng
+        self.rows = rows
+        self.chunk_bytes = chunk_bytes
+        self.pool_size = pool_size
+        self.max_sessions = max_sessions
+        self.inner_store = MemoryStore()
+        self.fstore = FaultyStore(self.inner_store) if faulty else None
+        self.svc = self._open_service(fsck_on_open=False)
+        #: live session id -> its current (mutable) state tree
+        self.states: Dict[str, Dict[str, Any]] = {}
+        #: tid -> deep snapshot at commit time (shared across sessions —
+        #: a fork's head is its parent's commit)
+        self.snaps: Dict[int, Any] = {}
+        self.round_no = 0
+        self._sid_counter = 0
+
+    def _open_service(self, fsck_on_open):
+        from repro.sessions import SessionService
+        store = self.fstore if self.fstore is not None else self.inner_store
+        return SessionService(store, pool_size=self.pool_size,
+                              fsck_on_open=fsck_on_open,
+                              chunk_bytes=self.chunk_bytes,
+                              use_kernel=False)
+
+    def _ctx(self, tag: str) -> str:
+        return (f"round {self.round_no} ({tag}) at proptest seed "
+                f"{BASE_SEED} (replay: --proptest-seed={BASE_SEED})")
+
+    def _tip(self, sid: str):
+        ctx = self.svc.sessions.get(sid)
+        return ctx.head if ctx is not None else None
+
+    def _saved(self) -> List[str]:
+        """Session ids whose branch exists (at least one commit/fork)."""
+        return sorted(s for s in self.states if self._tip(s) is not None)
+
+    # -- workload steps ------------------------------------------------------
+    def open(self) -> str:
+        self.round_no += 1
+        self._sid_counter += 1
+        sid = f"s{self._sid_counter}"
+        parents = self._saved()
+        if parents and float(self.rng.random()) < 0.5:
+            parent = parents[int(self.rng.integers(0, len(parents)))]
+            from repro.sessions import SESSION_NS
+            self.svc.open_session(sid, from_ref=SESSION_NS + parent)
+            state = self.svc.resume_session(sid)
+            tip = self._tip(sid)
+            assert tree_equal(state, self.snaps[tip]), \
+                self._ctx(f"open {sid} forked from {parent}")
+        else:
+            self.svc.open_session(sid)
+            state = base_state(self.rng, rows=self.rows)
+        self.states[sid] = state
+        return sid
+
+    def save(self, sid: Optional[str] = None) -> int:
+        self.round_no += 1
+        if sid is None:
+            sids = sorted(self.states)
+            sid = sids[int(self.rng.integers(0, len(sids)))]
+        state = self.states[sid]
+        if float(self.rng.random()) < 0.5:
+            tag = mutate_state(state, self.rng, self.round_no)
+        else:
+            tag = sparse_mutate_state(state, self.rng, self.round_no)
+        tid = self.svc.save_session(sid, state)
+        self.snaps[tid] = snapshot_state(state)
+        ck = self.svc.pool[self.svc.sessions[sid].slot]
+        assert tree_equal(ck.load(time_id=tid), self.snaps[tid]), \
+            self._ctx(f"save {sid} ({tag}) tid {tid}")
+        return tid
+
+    def resume(self, sid: Optional[str] = None) -> None:
+        self.round_no += 1
+        sids = self._saved()
+        if not sids:
+            return
+        if sid is None:
+            sid = sids[int(self.rng.integers(0, len(sids)))]
+        state = self.svc.resume_session(sid)
+        tip = self._tip(sid)
+        assert tree_equal(state, self.snaps[tip]), \
+            self._ctx(f"resume {sid} tid {tip}")
+        self.states[sid] = state
+
+    def evict(self, sid: Optional[str] = None):
+        """Evict one session, verified bit-identical against the
+        mark-and-sweep oracle of the same branch deletion."""
+        from repro.version import mark_and_sweep
+        self.round_no += 1
+        sids = self._saved()
+        if not sids:
+            return None
+        if sid is None:
+            sid = sids[int(self.rng.integers(0, len(sids)))]
+        ctx_msg = self._ctx(f"evict {sid}")
+        branch = self.svc.sessions[sid].branch
+        for ck in self.svc.pool:
+            ck.wait()
+        store = self.svc.store
+        ck0 = self.svc.pool[0]
+        ck0.versions.sync()
+        tip = ck0.versions.branches[branch]
+        # oracle: transiently delete the ref and record what a full
+        # mark-and-sweep would free.  Pool heads other than the dying
+        # tip stay roots, mirroring the real eviction's extra_roots.
+        ck0.versions.delete_branch(branch)
+        extra = tuple(ck._head for ck in self.svc.pool
+                      if ck._head is not None and ck._head != tip)
+        oracle = mark_and_sweep(store, ck0.versions, extra_roots=extra,
+                                dry_run=True)
+        ck0.versions.create_branch(branch, at=tip, switch=False)
+        real = self.svc.evict_session(sid)
+        self.states.pop(sid)
+        assert set(real.deleted_pod_digests) \
+            == set(oracle.deleted_pod_digests), \
+            (ctx_msg, real.deleted_pod_digests, oracle.deleted_pod_digests)
+        assert real.bytes_reclaimed == oracle.bytes_reclaimed, \
+            (ctx_msg, real.bytes_reclaimed, oracle.bytes_reclaimed)
+        assert real.n_commits_deleted == oracle.n_commits_deleted, \
+            (ctx_msg, real.n_commits_deleted, oracle.n_commits_deleted)
+        # nothing left on the table: a full sweep now finds zero
+        left = mark_and_sweep(
+            store, ck0.versions, dry_run=True,
+            extra_roots=tuple(ck._head for ck in self.svc.pool
+                              if ck._head is not None))
+        assert left.n_pods_deleted == 0 and left.n_commits_deleted == 0, \
+            (ctx_msg, "refcount evict under-reclaimed", left)
+        # the persistent index equals a from-scratch scan
+        assert not ck0.refcounts.rebuild(), \
+            (ctx_msg, "refcount index drifted from store scan")
+        return real
+
+    def crash_evict(self, point: Optional[str] = None,
+                    flavor: Optional[str] = None, skip: int = 0) -> bool:
+        """One crash-mid-evict round (requires ``faulty=True``): arm a
+        store-write fault, attempt the eviction, and on crash reboot the
+        whole service (deep fsck rebuilds the refcount index) and verify
+        every surviving session restores bit-identical.  Returns whether
+        the armed fault actually fired."""
+        from repro.core import InjectedCrash
+        assert self.fstore is not None, "SessionWorkload(faulty=True) required"
+        self.round_no += 1
+        sids = self._saved()
+        if not sids:
+            return False
+        sid = sids[int(self.rng.integers(0, len(sids)))]
+        if point is None:
+            point, flavor, skip = EVICT_CRASH_POINTS[
+                int(self.rng.integers(0, len(EVICT_CRASH_POINTS)))]
+        for ck in self.svc.pool:
+            ck.wait()
+        self.fstore.clear()
+        fault = self.fstore.arm(point, flavor, skip=skip)
+        try:
+            self.svc.evict_session(sid)
+            crashed = False
+        except InjectedCrash:
+            crashed = True
+        self.fstore.clear()
+        tag = f"crash-evict {sid} {point}/{flavor}+{skip}"
+        if not crashed:
+            # the armed write never ran (e.g. an empty reclaim skipped
+            # the index CAS): the eviction completed normally.
+            assert fault.n_fired == 0, self._ctx(tag + " fired but survived")
+            self.states.pop(sid)
+            return False
+        self.reboot(tag)
+        return True
+
+    def reboot(self, tag: str) -> None:
+        """Model the process dying: abandon the service, reopen over the
+        same store with a deep-repair fsck, verify the fsck-rebuilt
+        refcount index against a fresh scan, full-GC the debris, and
+        re-adopt every surviving session."""
+        from repro.sessions import SESSION_NS
+        self.svc = self._open_service(fsck_on_open="deep")
+        ck0 = self.svc.pool[0]
+        rep = ck0.last_fsck
+        assert rep is not None, self._ctx(tag)
+        # fsck's index rebuild is the contract under test: the persisted
+        # index must now equal a from-scratch store scan.
+        assert not ck0.refcounts.rebuild(), \
+            self._ctx(tag + ": post-fsck refcount index != store scan")
+        # half-evict debris (dangling manifests / orphan pods) goes to
+        # the fsck-time oracle, full mark-and-sweep
+        ck0.gc(full=True)
+        branches = ck0.versions.branches_under(SESSION_NS)
+        for sid in sorted(self.states):
+            tip = branches.get(SESSION_NS + sid)
+            if tip is None:
+                # the refs CAS landed before the crash: evicted.
+                self.states.pop(sid)
+                continue
+            state = self.svc.resume_session(sid)
+            assert tree_equal(state, self.snaps[tip]), \
+                self._ctx(f"{tag}: post-reboot resume {sid} tid {tip}")
+            self.states[sid] = state
+
+    # -- verification --------------------------------------------------------
+    def verify_live(self) -> None:
+        """Every snapshotted commit still in the store loads
+        bit-identical; every live session's tip snapshot survives."""
+        ck0 = self.svc.pool[0]
+        live = set(self.svc.store.list_time_ids())
+        for tid in sorted(self.snaps):
+            if tid not in live:
+                continue
+            assert tree_equal(ck0.load(time_id=tid), self.snaps[tid]), \
+                self._ctx(f"verify-live tid {tid}")
+        for sid in self._saved():
+            assert self._tip(sid) in live, self._ctx(f"lost tip of {sid}")
+
+    # -- random driver -------------------------------------------------------
+    def run(self, n_rounds: int, *, p_open: float = 0.2,
+            p_resume: float = 0.15, p_evict: float = 0.15,
+            p_crash: float = 0.0) -> None:
+        """`n_rounds` random rounds: interleaved per-session mutate+save
+        by default, with open/fork, resume, oracle-verified evict, and
+        (``faulty=True``) crash-mid-evict rounds at the given rates.
+        Ends with a full `verify_live` pass."""
+        self.open()
+        self.open()
+        for _ in range(n_rounds):
+            r = float(self.rng.random())
+            if r < p_open and len(self.states) < self.max_sessions:
+                self.open()
+            elif r < p_open + p_resume:
+                self.resume()
+            elif r < p_open + p_resume + p_evict and len(self._saved()) > 1:
+                self.evict()
+            elif (p_crash and len(self._saved()) > 1
+                  and r < p_open + p_resume + p_evict + p_crash):
+                self.crash_evict()
+            else:
+                if not self.states:
+                    self.open()
+                self.save()
+        self.verify_live()

@@ -1,0 +1,432 @@
+"""Multi-tenant session checkpoint service: per-session branches over one
+shared store, cross-session pod dedup, migration via resume, refcount
+eviction verified against the mark-and-sweep oracle, crash-mid-evict
+recovery, the async large-host-leaf guard, and shared TimeID allocation."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import Chipmink, FaultyStore, InjectedCrash, MemoryStore
+from repro.sessions import SESSION_NS, SessionService
+from repro.version import mark_and_sweep
+
+from proptest import SessionWorkload, base_state, case_rng, tree_equal
+
+
+def _state(rng, rows=96):
+    return base_state(rng, rows=rows)
+
+
+def _svc(store=None, **kw):
+    kw.setdefault("pool_size", 2)
+    kw.setdefault("chunk_bytes", 1 << 10)
+    kw.setdefault("use_kernel", False)
+    kw.setdefault("fsck_on_open", False)
+    return SessionService(store if store is not None else MemoryStore(), **kw)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: open / save / branches / fleet stats
+# ---------------------------------------------------------------------------
+
+def test_session_lifecycle_and_branches():
+    rng = np.random.default_rng(0)
+    svc = _svc()
+    svc.open_session("a")
+    svc.open_session("b")
+    sa, sb = _state(rng), _state(rng)
+    ta1 = svc.save_session("a", sa)
+    tb1 = svc.save_session("b", sb)
+    sa["step"] = 1
+    ta2 = svc.save_session("a", sa)
+
+    dag = svc.pool[0].versions
+    dag.sync()
+    br = dag.branches_under(SESSION_NS)
+    assert br == {SESSION_NS + "a": ta2, SESSION_NS + "b": tb1}
+    # per-session lineage: a's second save chains to its first, not b's
+    assert svc.store.get_manifest(ta2)["parent"] == ta1
+    assert svc.store.get_manifest(tb1)["parent"] is None
+    # saves never move the instances' HEAD branch
+    assert dag.head_commit() is None
+
+    fleet = svc.fleet_stats()
+    assert fleet.n_sessions == 2
+    assert fleet.n_saves == 3
+    assert fleet.logical_tip_bytes > 0
+    assert fleet.physical_tip_bytes > 0
+
+
+def test_open_rejects_duplicate_and_existing_branch():
+    rng = np.random.default_rng(1)
+    svc = _svc()
+    svc.open_session("a")
+    svc.save_session("a", _state(rng))
+    with pytest.raises(ValueError, match="already open"):
+        svc.open_session("a")
+    # forget the ctx but keep the branch: open must refuse, resume adopts
+    del svc.sessions["a"]
+    svc._bound = [None] * len(svc.pool)
+    with pytest.raises(ValueError, match="resume_session"):
+        svc.open_session("a")
+    assert svc.resume_session("a") is not None
+
+
+def test_fork_dedups_tip_bytes():
+    """Sessions forked from one parent share its tip pod-for-pod: the
+    fleet's logical tip bytes are ~n× its physical union."""
+    rng = np.random.default_rng(2)
+    svc = _svc()
+    svc.open_session("root")
+    svc.save_session("root", _state(rng, rows=256))
+    n = 4
+    for i in range(n):
+        svc.open_session(f"fork{i}", from_ref=SESSION_NS + "root")
+    fleet = svc.fleet_stats()
+    # 5 identical tips, one physical copy
+    assert fleet.n_sessions == n + 1
+    assert fleet.dedup_ratio == pytest.approx(n + 1)
+    # forks diverge pod-by-pod: one mutated fork still shares most pods
+    st = svc.resume_session("fork0")
+    st["params"]["emb"][:2] += np.float32(1.0)
+    svc.save_session("fork0", st)
+    fleet = svc.fleet_stats()
+    assert 1.5 < fleet.dedup_ratio
+
+
+def test_resume_migrates_across_service_instances():
+    """A branch committed by one service becomes live on another:
+    bit-identical restore, and the first post-migration save is
+    incremental (writes a delta, not the whole tip)."""
+    rng = np.random.default_rng(3)
+    store = MemoryStore()
+    svc1 = _svc(store)
+    svc1.open_session("a")
+    st = _state(rng, rows=256)
+    svc1.save_session("a", st)
+    st["params"]["emb"][:4] += np.float32(0.5)
+    tip = svc1.save_session("a", st)
+    for ck in svc1.pool:
+        ck.wait()
+
+    svc2 = _svc(store)
+    restored = svc2.resume_session("a")
+    assert tree_equal(restored, st)
+    assert svc2.sessions["a"].head == tip
+
+    restored["params"]["emb"][:2] += np.float32(0.25)
+    tid = svc2.save_session("a", restored)
+    assert svc2.store.get_manifest(tid)["parent"] == tip
+    tip_bytes = sum(svc2.store.pod_nbytes(d)
+                    for d in svc2.pool[0].versions.pod_digests_of(tid))
+    ck = svc2.pool[svc2.sessions["a"].slot]
+    # primed pipeline: the post-migration save wrote a small delta
+    assert ck.save_stats[-1]["bytes_written"] < tip_bytes / 2
+
+
+def test_interleaved_sessions_keep_incremental_pipelines():
+    """Round-robin saves across more sessions than pool slots must stay
+    correct AND incremental: each session's steady-state save writes far
+    less than its tip (its own detector state survives the swaps)."""
+    rng = np.random.default_rng(4)
+    svc = _svc(pool_size=1)
+    states = {}
+    for s in range(3):
+        svc.open_session(f"s{s}")
+        states[f"s{s}"] = _state(rng, rows=256)
+    for rnd in range(3):
+        for sid, st in states.items():
+            st["params"]["emb"][rnd:rnd + 2] += np.float32(0.1)
+            tid = svc.save_session(sid, st)
+            assert tree_equal(svc.pool[0].load(time_id=tid), st)
+    ck = svc.pool[0]
+    last = ck.save_stats[-1]
+    tip_bytes = sum(svc.store.pod_nbytes(d)
+                    for d in ck.versions.pod_digests_of(last["time_id"]))
+    assert last["bytes_written"] < tip_bytes / 2
+
+
+# ---------------------------------------------------------------------------
+# eviction: refcount reclaim vs the mark-and-sweep oracle
+# ---------------------------------------------------------------------------
+
+def test_evict_matches_mark_and_sweep_oracle():
+    """The tested contract: evicting a session reclaims exactly the pod
+    digests / commits / bytes a full mark-and-sweep would free after the
+    same branch deletion — and afterwards a full sweep finds nothing."""
+    rng = np.random.default_rng(5)
+    svc = _svc()
+    for sid in ("keep", "die"):
+        svc.open_session(sid)
+        st = _state(rng, rows=128)
+        for rnd in range(3):
+            st["params"]["emb"][rnd] += np.float32(1.0)
+            svc.save_session(sid, st)
+    for ck in svc.pool:
+        ck.wait()
+    ck0 = svc.pool[0]
+    ck0.versions.sync()
+    branch = SESSION_NS + "die"
+    tip = ck0.versions.branches[branch]
+    ck0.versions.delete_branch(branch)
+    extra = tuple(ck._head for ck in svc.pool
+                  if ck._head is not None and ck._head != tip)
+    oracle = mark_and_sweep(svc.store, ck0.versions, extra_roots=extra,
+                            dry_run=True)
+    ck0.versions.create_branch(branch, at=tip, switch=False)
+
+    dry = ck0.evict_branch(branch, dry_run=True)
+    real = svc.evict_session("die")
+    assert oracle.n_commits_deleted == 3
+    assert set(real.deleted_pod_digests) == set(oracle.deleted_pod_digests)
+    assert real.bytes_reclaimed == oracle.bytes_reclaimed > 0
+    assert real.n_commits_deleted == oracle.n_commits_deleted
+    assert dry.bytes_reclaimed == real.bytes_reclaimed
+    left = mark_and_sweep(svc.store, ck0.versions, dry_run=True,
+                          extra_roots=tuple(ck._head for ck in svc.pool
+                                            if ck._head is not None))
+    assert left.n_pods_deleted == 0 and left.n_commits_deleted == 0
+    # surviving session untouched
+    keep_tip = svc.sessions["keep"].head
+    assert svc.pool[0].load(time_id=keep_tip) is not None
+    # the persistent index equals a from-scratch scan
+    assert not ck0.refcounts.rebuild()
+
+
+def test_evicting_fork_keeps_shared_history():
+    """A fork shares its ancestry with the parent: evicting the fork
+    frees only its exclusive delta; evicting it before any divergence
+    frees nothing at all."""
+    rng = np.random.default_rng(6)
+    svc = _svc()
+    svc.open_session("root")
+    st = _state(rng, rows=128)
+    root_tip = svc.save_session("root", st)
+    svc.open_session("twin", from_ref=SESSION_NS + "root")
+    stats = svc.evict_session("twin")          # zero divergence
+    assert stats.n_commits_deleted == 0
+    assert stats.bytes_reclaimed == 0
+
+    svc.open_session("fork", from_ref=SESSION_NS + "root")
+    fs = svc.resume_session("fork")
+    fs["params"]["emb"][:2] += np.float32(2.0)
+    svc.save_session("fork", fs)
+    stats = svc.evict_session("fork")          # only the fork's delta
+    assert stats.n_commits_deleted == 1
+    assert stats.bytes_reclaimed > 0
+    assert tree_equal(svc.pool[0].load(time_id=root_tip), st)
+
+
+def test_evict_idle():
+    rng = np.random.default_rng(7)
+    svc = _svc()
+    for sid in ("old", "fresh"):
+        svc.open_session(sid)
+        svc.save_session(sid, _state(rng))
+    svc.sessions["old"].last_used = 100.0
+    svc.sessions["fresh"].last_used = 1000.0
+    assert svc.evict_idle(50.0, now=1001.0) == ["old"]
+    assert svc.session_ids() == ["fresh"]
+
+
+def test_delete_branch_backlog_then_incremental_gc():
+    """Without the service: `delete_branch` remembers the orphaned tip,
+    and the next plain `gc()` reclaims it via the refcount index —
+    matching the mark-and-sweep plan for the same state."""
+    rng = np.random.default_rng(8)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 10, use_kernel=False,
+                  refcounts=True)
+    st = _state(rng, rows=128)
+    ck.save(st)
+    ck.branch("scratch")
+    st["params"]["emb"][:4] += np.float32(1.0)
+    ck.save(st)
+    ck.checkout("main")
+    ck.delete_branch("scratch")
+    oracle = mark_and_sweep(ck.store, ck.versions,
+                            extra_roots=(ck._head,), dry_run=True)
+    real = ck.gc()                              # incremental by default
+    assert real.n_mark_restarts == 0            # no full mark ran
+    assert set(real.deleted_pod_digests) == set(oracle.deleted_pod_digests)
+    assert real.bytes_reclaimed == oracle.bytes_reclaimed > 0
+    assert not ck._gc_backlog
+    assert not ck.refcounts.rebuild()
+
+
+def test_gc_full_trues_up_refcount_index():
+    """`gc(full=True)` runs the oracle sweep and reconciles the index
+    with whatever it deleted."""
+    rng = np.random.default_rng(9)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 10, use_kernel=False,
+                  refcounts=True)
+    st = _state(rng, rows=96)
+    ck.save(st)
+    ck.branch("b")
+    st["step"] = 1
+    ck.save(st)
+    ck.checkout("main")
+    ck.delete_branch("b")
+    stats = ck.gc(full=True)
+    assert stats.n_commits_deleted == 1
+    assert not ck._gc_backlog
+    assert not ck.refcounts.rebuild()
+
+
+# ---------------------------------------------------------------------------
+# crash mid-evict: fsck rebuilds the index, full GC clears the debris
+# ---------------------------------------------------------------------------
+
+def test_crash_mid_evict_fsck_rebuilds_refcounts():
+    rng = np.random.default_rng(10)
+    inner = MemoryStore()
+    fstore = FaultyStore(inner)
+    svc = _svc(fstore, pool_size=1)
+    keep_state = _state(rng, rows=128)
+    svc.open_session("keep")
+    keep_tip = svc.save_session("keep", keep_state)
+    svc.open_session("die")
+    st = _state(rng, rows=128)
+    for rnd in range(2):
+        st["params"]["emb"][rnd] += np.float32(1.0)
+        svc.save_session("die", st)
+    for ck in svc.pool:
+        ck.wait()
+
+    # die after the refs CAS and the index CAS but before any manifest
+    # delete: the store keeps unreachable manifests the index no longer
+    # counts — exactly the drift fsck's rebuild must repair.
+    fstore.clear()
+    fstore.arm("delete_manifest", "crash-before")
+    with pytest.raises(InjectedCrash):
+        svc.evict_session("die")
+    fstore.clear()
+
+    svc2 = _svc(fstore, pool_size=1, fsck_on_open="deep")
+    ck0 = svc2.pool[0]
+    assert ck0.last_fsck.refcounts_rebuilt
+    # the fsck-rebuilt index matches a fresh store scan
+    assert not ck0.refcounts.rebuild()
+    # the surviving session is intact, the dead branch is gone
+    assert ck0.versions.branches_under(SESSION_NS) \
+        == {SESSION_NS + "keep": keep_tip}
+    assert tree_equal(svc2.resume_session("keep"), keep_state)
+    # the debris goes to the fsck-time oracle: full mark-and-sweep
+    swept = ck0.gc(full=True)
+    assert swept.n_commits_deleted == 2
+    assert swept.bytes_reclaimed > 0
+    left = ck0.gc(full=True, dry_run=True)
+    assert left.n_pods_deleted == 0 and left.n_commits_deleted == 0
+    assert not ck0.refcounts.rebuild()
+
+
+def test_fsck_rebuilds_corrupt_refcount_blob():
+    rng = np.random.default_rng(11)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 10, use_kernel=False,
+                  refcounts=True)
+    ck.save(_state(rng))
+    ck.store.put_meta("pod_refcounts", b"\x00garbage")
+    rep = ck.fsck()
+    assert rep.refcounts_rebuilt
+    assert not ck.refcounts.rebuild()
+
+
+# ---------------------------------------------------------------------------
+# satellite: async large-host-leaf guard
+# ---------------------------------------------------------------------------
+
+def _big_leaf_state(rng):
+    # 512×16 f32 = 32 KiB writable host leaf, far over the 1 KiB cap
+    return {"big": rng.standard_normal((512, 16)).astype(np.float32),
+            "small": rng.standard_normal(8).astype(np.float32)}
+
+
+def test_large_leaf_guard_warns_once_per_key():
+    rng = np.random.default_rng(12)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 10, use_kernel=False,
+                  async_mode=True, copy_on_submit_bytes=1 << 10)
+    st = _big_leaf_state(rng)
+    with pytest.warns(RuntimeWarning, match="copy_on_submit_bytes"):
+        ck.save(st)
+    ck.wait()
+    st["big"][:2] += np.float32(1.0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # same key: no re-warn
+        ck.save(st)
+    ck.wait()
+    assert len(ck.store.list_time_ids()) == 2
+
+
+def test_large_leaf_guard_raise_mode():
+    rng = np.random.default_rng(13)
+    ck = Chipmink(MemoryStore(), chunk_bytes=1 << 10, use_kernel=False,
+                  async_mode=True, copy_on_submit_bytes=1 << 10,
+                  large_leaf_action="raise")
+    with pytest.raises(ValueError, match="copy_on_submit_bytes"):
+        ck.save(_big_leaf_state(rng))
+    assert ck.store.list_time_ids() == []       # nothing half-saved
+    # the instance stays usable: a compliant state saves fine
+    tid = ck.save({"small": rng.standard_normal(8).astype(np.float32)})
+    ck.wait()
+    assert tid in ck.store.list_time_ids()
+
+
+def test_large_leaf_guard_inactive_when_ignored_or_sync():
+    rng = np.random.default_rng(14)
+    for kw in (dict(async_mode=True, large_leaf_action="ignore"),
+               dict(async_mode=False),          # sync: immune by design
+               dict(async_mode=True, copy_on_submit_bytes=0)):
+        ck = Chipmink(MemoryStore(), chunk_bytes=1 << 10, use_kernel=False,
+                      copy_on_submit_bytes=kw.pop("copy_on_submit_bytes",
+                                                  1 << 10), **kw)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            ck.save(_big_leaf_state(rng))
+        ck.wait()
+
+
+# ---------------------------------------------------------------------------
+# satellite: shared TimeID allocation (lease-less pools)
+# ---------------------------------------------------------------------------
+
+def test_shared_tids_never_collide():
+    rng = np.random.default_rng(15)
+    store = MemoryStore()
+    cks = [Chipmink(store, chunk_bytes=1 << 10, use_kernel=False,
+                    shared_tids=True, refcounts=True) for _ in range(2)]
+    states = [_state(rng, rows=64) for _ in cks]
+    tids = []
+    for rnd in range(3):
+        for i, ck in enumerate(cks):
+            states[i]["step"] = rnd
+            # branch saves chain to their own branch tip by default
+            tids.append(ck.save(states[i], branch=f"{SESSION_NS}w{i}"))
+    assert len(set(tids)) == len(tids)
+    assert sorted(tids) == tids                 # CAS counter is monotone
+    assert set(store.list_time_ids()) == set(tids)
+
+
+# ---------------------------------------------------------------------------
+# randomized fleet workloads (tests/proptest.py)
+# ---------------------------------------------------------------------------
+
+def test_session_workload_property():
+    """Seeded open/fork/save/resume/evict rounds: every save reads back
+    bit-identical, every resume restores the tip, and every eviction is
+    bit-identical to the mark-and-sweep oracle."""
+    for case in range(3):
+        rng = case_rng("test_session_workload_property", case)
+        wl = SessionWorkload(rng)
+        wl.run(10)
+        assert len(wl.snaps) >= 3
+
+
+def test_session_workload_crash_property():
+    """Same fleet workload with crash-mid-evict rounds: every crash
+    reboots through deep fsck (index rebuilt from the store) and all
+    surviving sessions restore bit-identical."""
+    for case in range(2):
+        rng = case_rng("test_session_workload_crash_property", case)
+        wl = SessionWorkload(rng, faulty=True)
+        wl.run(10, p_crash=0.3)
+        wl.verify_live()

@@ -456,7 +456,9 @@ def test_copy_on_submit_respects_threshold():
     state = {"small": small, "big": big}
     ck = Chipmink(MemoryStore(), chunk_bytes=1 << 12, async_mode=True,
                   copy_on_submit_bytes=1 << 10)
-    ck.save(state)
+    # `big` rides by reference — the async-safety guard must say so
+    with pytest.warns(RuntimeWarning, match="copy_on_submit_bytes"):
+        ck.save(state)
     ck.wait()
     assert ck.save_stats[-1]["n_leaf_copies"] == 1          # only `small`
 
